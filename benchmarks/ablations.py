@@ -1,0 +1,25 @@
+"""Beyond-paper ablations: chunk size, block size, burst-reserve k_sigma —
+the §2.1/§5.3 knobs the paper fixes by fiat."""
+from __future__ import annotations
+
+from benchmarks.scenario import build_engine
+from repro.core import ECHO
+
+
+def _tput(**kw) -> float:
+    eng, online, offline, p = build_engine(ECHO, **kw)
+    stats = eng.run(max_iters=200_000, until_time=p["duration"])
+    return stats.offline_throughput(), eng.bm.metrics.offline_hit_rate
+
+
+def rows():
+    out = []
+    for chunk in (32, 64, 128):
+        tput, hit = _tput(chunk_size=chunk, duration=30.0)
+        out.append((f"ablation.chunk_{chunk}", 0.0,
+                    f"{tput:.1f}tok/s hit={hit:.3f}"))
+    for bs in (8, 16, 32):
+        tput, hit = _tput(block_size=bs, duration=30.0)
+        out.append((f"ablation.block_{bs}", 0.0,
+                    f"{tput:.1f}tok/s hit={hit:.3f}"))
+    return out

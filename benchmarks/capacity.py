@@ -1,0 +1,33 @@
+"""§5.4 capacity planning: min resources for SLOs + offline throughput."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.scenario import time_model
+from repro.core import SLO
+from repro.core.simulator import estimate_capacity
+from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
+
+
+def rows():
+    tm = time_model()
+    trace = BurstyTrace(base_rate=4.0, tidal_period=120.0, burst_rate=6.0,
+                        burst_len=8.0, burst_prob=0.05, seed=11)
+    arrivals = trace.sample(0, 30)
+    online = make_online_requests(arrivals, prompt_mean=128, prompt_std=32,
+                                  max_new_mean=24, slo=SLO(1.0, 0.1), seed=12)
+    offline = make_offline_corpus(8, 16, doc_len=256, question_len=32,
+                                  max_new=16, seed=13)
+    t0 = time.perf_counter()
+    rep = estimate_capacity(online, offline, tm,
+                            candidate_blocks=(32, 64, 128, 256, 512),
+                            slo_target=0.9, duration=30.0)
+    wall = (time.perf_counter() - t0) * 1e6
+    out = [("capacity.min_blocks_for_slo", wall,
+            str(rep.min_blocks_for_slo))]
+    for nb, att in rep.slo_by_blocks:
+        out.append((f"capacity.slo_at_{nb}blocks", 0.0, f"{att:.3f}"))
+    if rep.offline_throughput is not None:
+        out.append(("capacity.offline_tput_at_min", 0.0,
+                    f"{rep.offline_throughput:.1f}tok/s"))
+    return out

@@ -1,0 +1,69 @@
+"""§5.2 table: time-model accuracy against real (wall-clock) engine runs on
+the tiny model — fit on micro-benchmarks, validate on held-out batches."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.estimator import TimeModel
+from repro.models import Model
+from repro.models.paged import PagedRunner
+
+_CFG = ModelConfig(name="bench-tiny", family="dense", source="bench",
+                   num_layers=2, d_model=64, vocab_size=128, num_heads=4,
+                   num_kv_heads=2, head_dim=16, d_ff=128, dtype="float32",
+                   rope_theta=10_000.0)
+
+
+def rows():
+    model = Model(_CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    bs, chunk = 8, 32
+    runner = PagedRunner(model, params, num_pages=128, page_size=bs,
+                         max_pages_per_seq=16, chunk_size=chunk)
+
+    def t_prefill(l, reps=5):
+        toks = list(range(l))
+        bt = list(range((l + bs - 1) // bs + 1))
+        runner.prefill_chunk(toks, 0, bt)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            runner.prefill_chunk(toks, 0, bt)
+        return (time.perf_counter() - t0) / reps
+
+    def t_decode(nbatch, ctx, reps=5):
+        toks = [1] * nbatch
+        bts = [list(range(i * 8, i * 8 + 16)) for i in range(nbatch)]
+        pos = [ctx] * nbatch
+        runner.decode(toks, bts, pos)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            runner.decode(toks, bts, pos)
+        return (time.perf_counter() - t0) / reps
+
+    tm = TimeModel()
+    fit_p = [(l, t_prefill(l)) for l in (8, 16, 24, 32)]
+    tm.fit_prefill(fit_p)
+    fit_d = [(ctx, float(ctx), t_decode(b, ctx))
+             for b in (1, 2, 4) for ctx in (16, 64)]
+    tm.fit_decode(fit_d)
+
+    out = []
+    errs = []
+    for l in (12, 28):
+        want = t_prefill(l)
+        got = tm.prefill_time([(0, l)])
+        errs.append(abs(got - want) / want)
+        out.append((f"estimator.prefill_l{l}", want * 1e6,
+                    f"pred={got * 1e6:.0f}us err={errs[-1]:.2f}"))
+    for b, ctx in ((2, 32), (4, 96)):
+        want = t_decode(b, ctx)
+        got = tm.decode_time([ctx] * b)
+        errs.append(abs(got - want) / want)
+        out.append((f"estimator.decode_b{b}_c{ctx}", want * 1e6,
+                    f"pred={got * 1e6:.0f}us err={errs[-1]:.2f}"))
+    out.append(("estimator.mean_rel_err", 0.0, f"{np.mean(errs):.3f}"))
+    return out

@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks: ref-oracle wall time on CPU + structural check
+that the Pallas kernels (interpret mode) agree. On TPU the pallas path
+compiles natively; us_per_call here is the CPU ref number."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.chunked_prefill import chunked_prefill_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _time(fn, reps=10):
+    fn()                                    # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows():
+    rng = jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 8)
+    out = []
+
+    b, hq, hkv, hd, p, bs, nblk = 8, 8, 2, 64, 64, 16, 16
+    q = jax.random.normal(ks[0], (b, hq, hd))
+    kp = jax.random.normal(ks[1], (p, bs, hkv, hd))
+    vp = jax.random.normal(ks[2], (p, bs, hkv, hd))
+    bt = jax.random.randint(ks[3], (b, nblk), 0, p)
+    cl = jnp.full((b,), nblk * bs, jnp.int32)
+    jit_ref = jax.jit(ref.ref_paged_attention)
+    us = _time(lambda: jit_ref(q, kp, vp, bt, cl))
+    got = paged_attention(q, kp, vp, bt, cl, interpret=True)
+    want = jit_ref(q, kp, vp, bt, cl)
+    ok = np.allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+    out.append(("kernel.paged_attention", us, f"pallas_matches={ok}"))
+
+    sc, t = 128, 512
+    q2 = jax.random.normal(ks[4], (sc, hq, hd))
+    k2 = jax.random.normal(ks[5], (t, hkv, hd))
+    v2 = jax.random.normal(ks[6], (t, hkv, hd))
+    jit_ref2 = jax.jit(ref.ref_chunked_prefill_attention)
+    us = _time(lambda: jit_ref2(q2, k2, v2, 256))
+    got = chunked_prefill_attention(q2, k2, v2, 256, blk_q=64, blk_k=64,
+                                    interpret=True)
+    ok = np.allclose(np.asarray(got), np.asarray(jit_ref2(q2, k2, v2, 256)),
+                     rtol=2e-4, atol=2e-4)
+    out.append(("kernel.chunked_prefill", us, f"pallas_matches={ok}"))
+
+    bz, s, h, pd, n = 2, 256, 4, 32, 16
+    x = jax.random.normal(ks[7], (bz, s, h, pd))
+    dta = -jax.nn.softplus(jax.random.normal(ks[0], (bz, s, h)))
+    bm = jax.random.normal(ks[1], (bz, s, n))
+    cm = jax.random.normal(ks[2], (bz, s, n))
+    jit_ref3 = jax.jit(ref.ref_ssd_sequential)
+    us = _time(lambda: jit_ref3(x, dta, bm, cm))
+    y, fs = ssd_scan(x, dta, bm, cm, chunk=64, interpret=True)
+    yr, fr = jit_ref3(x, dta, bm, cm)
+    ok = np.allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+    out.append(("kernel.ssd_scan", us, f"pallas_matches={ok}"))
+
+    from repro.kernels.rglru_scan import rglru_scan
+    a = jax.nn.sigmoid(jax.random.normal(ks[3], (2, 256, 128)))
+    bv = jax.random.normal(ks[4], (2, 256, 128))
+    jit_ref4 = jax.jit(ref.ref_rglru_scan)
+    us = _time(lambda: jit_ref4(a, bv))
+    got = rglru_scan(a, bv, chunk=64, interpret=True)
+    ok = np.allclose(np.asarray(got), np.asarray(jit_ref4(a, bv)),
+                     rtol=2e-4, atol=2e-4)
+    out.append(("kernel.rglru_scan", us, f"pallas_matches={ok}"))
+    return out

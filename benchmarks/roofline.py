@@ -1,0 +1,60 @@
+"""Roofline report from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json and prints per (arch x shape x mesh):
+compute / memory / collective seconds, dominant term, MODEL_FLOPS ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(mesh: str = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def rows(single_pod_only: bool = True):
+    out = []
+    recs = load_records("pod16x16" if single_pod_only else None)
+    for r in recs:
+        if not r.get("ok") or "roofline" not in r:
+            out.append((f"roofline.{r['arch']}.{r['shape']}", 0.0, "FAIL"))
+            continue
+        rf = r["roofline"]
+        out.append((
+            f"roofline.{r['arch']}.{r['shape']}",
+            rf[rf["dominant"]] * 1e6,       # dominant term in us
+            f"c={rf['compute_s']:.3e}s m={rf['memory_s']:.3e}s "
+            f"x={rf['collective_s']:.3e}s dom={rf['dominant'][:-2]} "
+            f"useful={r.get('useful_ratio', float('nan')):.2f}",
+        ))
+    return out
+
+
+def table() -> str:
+    lines = ["| arch | shape | compute s | memory s | coll s | dominant | "
+             "MODEL/HLO flops |", "|---|---|---|---|---|---|---|"]
+    for r in load_records("pod16x16"):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} | "
+            f"{rf['memory_s']:.3e} | {rf['collective_s']:.3e} | "
+            f"{rf['dominant'][:-2]} | {r.get('useful_ratio', 0):.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,51 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Figures 6-11 replay the paper's
+scenario through the §5.4 simulator (scheduler + KV manager + time model);
+estimator accuracy + kernel micro-benches run the real tiny model/kernels;
+the roofline rows read the dry-run artifacts (run
+``python -m repro.launch.dryrun --all --both-meshes`` first).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def _section(name, fn, rows_out):
+    t0 = time.perf_counter()
+    try:
+        rows = fn()
+    except Exception as e:
+        rows = [(f"{name}.ERROR", 0.0, f"{type(e).__name__}:{e}")]
+        traceback.print_exc(file=sys.stderr)
+    for r in rows:
+        rows_out.append(r)
+    print(f"# {name}: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+
+
+def main() -> None:
+    from benchmarks import ablations, capacity, estimator_accuracy, figures
+    from benchmarks import kernels_micro, roofline
+
+    rows = []
+    _section("fig6", figures.fig6_throughput_speedup, rows)
+    _section("fig7", figures.fig7_slo, rows)
+    _section("fig8", figures.fig8_interplay, rows)
+    _section("fig9", figures.fig9_hit_rate, rows)
+    _section("fig10", figures.fig10_memory, rows)
+    _section("fig11", figures.fig11_trace_prediction, rows)
+    _section("estimator", estimator_accuracy.rows, rows)
+    _section("capacity", capacity.rows, rows)
+    _section("kernels", kernels_micro.rows, rows)
+    _section("ablations", ablations.rows, rows)
+    _section("roofline", roofline.rows, rows)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

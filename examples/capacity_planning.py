@@ -1,0 +1,30 @@
+"""§5.4 estimation toolkit for system deployers: find the minimum KV-cache
+size meeting online SLOs at peak load, then the offline throughput the
+chosen deployment sustains.
+
+    PYTHONPATH=src python examples/capacity_planning.py
+"""
+from repro.core import SLO, TimeModel
+from repro.core.simulator import estimate_capacity
+from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
+
+tm = TimeModel(alpha=2e-7, beta=1e-4, c=2e-3, gamma=3e-5, delta=3e-5,
+               d0=2e-3, lam=0.9)
+
+# peak-window online workload (Step 1 simulates ~5 minutes of peak)
+trace = BurstyTrace(base_rate=4.0, tidal_period=600.0, burst_rate=6.0,
+                    burst_len=8.0, burst_prob=0.05, seed=0)
+online_peak = make_online_requests(trace.sample(0, 30.0), prompt_mean=128,
+                                   prompt_std=32, max_new_mean=24,
+                                   slo=SLO(1.0, 0.1), seed=1)
+offline = make_offline_corpus(8, 16, doc_len=256, question_len=32,
+                              max_new=16, seed=2)
+
+report = estimate_capacity(online_peak, offline, tm,
+                           candidate_blocks=(32, 64, 128, 256, 512),
+                           slo_target=0.9, duration=30.0)
+print("candidate KV sizes vs online SLO attainment:")
+for nb, att in report.slo_by_blocks:
+    print(f"  {nb:5d} blocks -> {att:.3f}")
+print(f"minimum blocks meeting SLOs : {report.min_blocks_for_slo}")
+print(f"offline throughput there    : {report.offline_throughput:.1f} tok/s")

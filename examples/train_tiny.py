@@ -1,0 +1,39 @@
+"""Train a reduced model for a few hundred steps (the train_4k substrate
+at CPU scale): data pipeline -> AdamW -> checkpoint.
+
+    PYTHONPATH=src python examples/train_tiny.py [--arch mamba2-1.3b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model
+from repro.training import adamw_init, make_train_step
+from repro.training import checkpoint as ckpt
+from repro.training.data import TokenStream
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b")
+ap.add_argument("--steps", type=int, default=200)
+args = ap.parse_args()
+
+cfg = get_config(args.arch).reduced()
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt = adamw_init(params)
+step = jax.jit(make_train_step(model, total_steps=args.steps))
+stream = TokenStream(cfg.vocab_size, seed=0)
+mm = cfg.mm_embed_dim if cfg.multimodal else None
+
+for i, batch in enumerate(stream.batches(4, 64, mm)):
+    params, opt, m = step(params, opt,
+                          {k: jnp.asarray(v) for k, v in batch.items()})
+    if i % 25 == 0:
+        print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+              f"lr {float(m['lr']):.2e}")
+    if i + 1 >= args.steps:
+        break
+ckpt.save("/tmp/repro_tiny_ckpt", params, step=args.steps)
+print("checkpoint saved to /tmp/repro_tiny_ckpt.npz")

@@ -1,0 +1,42 @@
+"""Architecture config registry (``--arch <id>``)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+_MODULES = {
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen3-4b": "qwen3_4b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "yi-9b": "yi_9b",
+    "musicgen-medium": "musicgen_medium",
+    "granite-34b": "granite_34b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "get_config",
+    "get_shape",
+]

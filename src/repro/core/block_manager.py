@@ -1,0 +1,311 @@
+"""Task-aware paged KV cache manager (paper §4.2).
+
+Block-granular KV cache with hash-based automatic prefix caching (vLLM APC
+style) and *priority + LRU* eviction:
+
+  running online tokens        priority = +inf   (ref'd: never evictable)
+  preempted online tokens      priority = 1e9
+  offline tokens, rc > 0       priority = rc     (future reuse; includes the
+                                                  unfinished owner itself)
+  finished online tokens       priority = 0.5
+  offline tokens, rc == 0      priority = 0
+
+plus a *threshold* capping the blocks held by running requests, reserving
+headroom for bursty online arrivals (set by the memory predictor, §5.3).
+With ``task_aware=False`` the manager degenerates to vLLM's plain LRU free
+table (the BS baseline).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.request import Request, TaskType
+
+ONLINE_PREEMPTED_PRIORITY = 1e9
+ONLINE_FINISHED_PRIORITY = 0.5
+
+
+def chain_hash(prev: int, tokens: Tuple[int, ...]) -> int:
+    return hash((prev, tokens))
+
+
+@dataclass
+class Block:
+    bid: int
+    hash: Optional[int] = None           # set once full & committed
+    ref: int = 0
+    lat: float = 0.0                     # last access time
+    task_type: TaskType = TaskType.OFFLINE
+    unfinished_owners: int = 0           # preempted owners that will return
+    n_tokens: int = 0                    # valid tokens in this block
+
+
+@dataclass
+class BlockManagerMetrics:
+    hit_blocks: int = 0
+    lookup_blocks: int = 0
+    offline_hit_blocks: int = 0
+    offline_lookup_blocks: int = 0
+    evictions: int = 0
+    punished_tokens: int = 0             # evicted tokens needed in the future
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hit_blocks / self.lookup_blocks if self.lookup_blocks else 0.0
+
+    @property
+    def offline_hit_rate(self) -> float:
+        """Fig.9's metric: prefix-cache hit ratio of offline prefills."""
+        if not self.offline_lookup_blocks:
+            return 0.0
+        return self.offline_hit_blocks / self.offline_lookup_blocks
+
+
+class BlockManager:
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 task_aware: bool = True,
+                 rc_provider: Optional[Callable[[int], int]] = None):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.task_aware = task_aware
+        self.rc_provider = rc_provider or (lambda h: 0)
+        self.blocks: List[Block] = [Block(i) for i in range(num_blocks)]
+        self.free: List[int] = list(range(num_blocks))   # never-used / cleared
+        self.hash_to_bid: Dict[int, int] = {}
+        self._heap: List[Tuple[float, float, int, int]] = []  # lazy entries
+        self._seq = itertools.count()
+        self.threshold_blocks = num_blocks               # running-KV cap
+        self.metrics = BlockManagerMetrics()
+
+    # ------------------------------------------------------------- stats
+    @property
+    def running_blocks(self) -> int:
+        return sum(1 for b in self.blocks if b.ref > 0)
+
+    @property
+    def cached_blocks(self) -> int:
+        return sum(1 for b in self.blocks if b.ref == 0 and b.hash is not None)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self.free)
+
+    def usage_breakdown(self) -> Dict[str, int]:
+        """For the Fig.10 memory-occupancy benchmark."""
+        out = {"running_online": 0, "running_offline": 0,
+               "free_online": 0, "free_offline": 0, "unused": len(self.free)}
+        for b in self.blocks:
+            if b.ref > 0:
+                key = "running_online" if b.task_type == TaskType.ONLINE else "running_offline"
+                out[key] += 1
+            elif b.hash is not None:
+                key = "free_online" if b.task_type == TaskType.ONLINE else "free_offline"
+                out[key] += 1
+        return out
+
+    # ------------------------------------------------------------- priority
+    def _priority(self, blk: Block) -> float:
+        if not self.task_aware:
+            return 0.0                                    # pure LRU
+        rc = self.rc_provider(blk.hash) + blk.unfinished_owners if blk.hash is not None else 0
+        if blk.task_type == TaskType.ONLINE:
+            if blk.unfinished_owners:
+                return ONLINE_PREEMPTED_PRIORITY
+            return ONLINE_FINISHED_PRIORITY
+        return float(rc)
+
+    def _push_evictable(self, blk: Block) -> None:
+        heapq.heappush(self._heap, (self._priority(blk), blk.lat,
+                                    next(self._seq), blk.bid))
+
+    # ------------------------------------------------------------- probing
+    def probe_prefix(self, tokens: Sequence[int]) -> int:
+        """Longest cached full-block prefix (in tokens). Read-only."""
+        n, prev, cached = 0, 0, 0
+        bs = self.block_size
+        while n + bs <= len(tokens):
+            h = chain_hash(prev, tuple(tokens[n: n + bs]))
+            if h not in self.hash_to_bid:
+                break
+            prev = h
+            n += bs
+            cached += bs
+        return cached
+
+    def evictable_count(self) -> int:
+        return sum(1 for b in self.blocks if b.ref == 0 and b.hash is not None)
+
+    def clean_evictable_count(self) -> int:
+        """Evictable blocks whose eviction carries no punishment (priority
+        < 1: dead offline, finished online) — plus never-used free blocks."""
+        n = len(self.free)
+        for b in self.blocks:
+            if b.ref == 0 and b.hash is not None and self._priority(b) < 1.0:
+                n += 1
+        return n
+
+    def can_allocate(self, n_new: int, *, respect_threshold: bool = True) -> bool:
+        if len(self.free) + self.evictable_count() < n_new:
+            return False
+        if respect_threshold and self.task_aware:
+            if self.running_blocks + n_new > self.threshold_blocks:
+                return False
+        return True
+
+    # ------------------------------------------------------------- eviction
+    def _evict_one(self) -> Optional[int]:
+        while self._heap:
+            prio, lat, _, bid = heapq.heappop(self._heap)
+            blk = self.blocks[bid]
+            if blk.ref > 0 or blk.hash is None:
+                continue                                  # stale entry
+            cur = (self._priority(blk), blk.lat)
+            if (prio, lat) != cur:                        # stale meta: refresh
+                self._push_evictable(blk)
+                continue
+            # evict
+            rc = self.rc_provider(blk.hash) + blk.unfinished_owners
+            if rc > 0:
+                self.metrics.punished_tokens += blk.n_tokens
+            del self.hash_to_bid[blk.hash]
+            blk.hash = None
+            blk.unfinished_owners = 0
+            blk.n_tokens = 0
+            self.metrics.evictions += 1
+            return bid
+        return None
+
+    def _get_free_block(self) -> Optional[int]:
+        if self.free:
+            return self.free.pop()
+        return self._evict_one()
+
+    # ------------------------------------------------------------- alloc
+    def allocate(self, req: Request, target_len: int, tokens: Sequence[int],
+                 now: float, *, respect_threshold: bool = True) -> Optional[int]:
+        """Ensure ``req`` owns blocks covering ``target_len`` token slots.
+
+        ``tokens`` is the known token content (prompt + generated so far);
+        full blocks within it are prefix-matched against the cache.
+        Returns the number of *leading consecutive cache-hit tokens* among
+        the newly covered blocks (0 if none), or None if memory is
+        insufficient (partial-progress refs rolled back).
+        """
+        bs = self.block_size
+        have = len(req.block_ids)
+        need_blocks = (target_len + bs - 1) // bs
+        if need_blocks <= have:
+            return 0
+        newly = []
+        leading_hits = 0
+        leading = True
+        prev = self._chain_up_to(req, have, tokens)
+        ok = True
+        matching = True                  # only a *leading* prefix may hit
+        for bi in range(have, need_blocks):
+            start = bi * bs
+            full = start + bs <= len(tokens)
+            h = (chain_hash(prev, tuple(tokens[start: start + bs]))
+                 if (full and matching) else None)
+            offline = req.task_type == TaskType.OFFLINE
+            if full:
+                self.metrics.lookup_blocks += 1
+                if offline:
+                    self.metrics.offline_lookup_blocks += 1
+            if h is not None and h in self.hash_to_bid:
+                bid = self.hash_to_bid[h]
+                blk = self.blocks[bid]
+                blk.ref += 1
+                blk.lat = now
+                if blk.unfinished_owners > 0:
+                    blk.unfinished_owners -= 1            # owner came back
+                self.metrics.hit_blocks += 1
+                if offline:
+                    self.metrics.offline_hit_blocks += 1
+                prev = h
+                if leading:
+                    leading_hits += bs
+            else:
+                matching = False
+                leading = False
+                if respect_threshold and self.task_aware and \
+                        self.running_blocks + 1 > self.threshold_blocks:
+                    ok = False
+                bid = self._get_free_block() if ok else None
+                if bid is None:
+                    ok = False
+                    break
+                blk = self.blocks[bid]
+                blk.ref = 1
+                blk.lat = now
+                blk.task_type = req.task_type
+                blk.hash = None
+                blk.n_tokens = 0
+            newly.append(bid)
+            req.block_ids.append(bid)
+        if not ok:
+            for bid in newly:
+                self._release_block(bid, now)
+                req.block_ids.pop()
+            return None
+        return leading_hits
+
+    def _chain_up_to(self, req: Request, n_blocks: int, tokens: Sequence[int]) -> int:
+        prev = 0
+        bs = self.block_size
+        for bi in range(n_blocks):
+            if (bi + 1) * bs <= len(tokens):
+                prev = chain_hash(prev, tuple(tokens[bi * bs: (bi + 1) * bs]))
+        return prev
+
+    def commit(self, req: Request, tokens: Sequence[int], now: float) -> None:
+        """Register hashes for req's now-full computed blocks (content known)."""
+        bs = self.block_size
+        prev = 0
+        covered = min(len(tokens), req.total_len)
+        n_full = covered // bs
+        # track valid tokens in the trailing partial block (for punishment)
+        if n_full < len(req.block_ids) and covered % bs:
+            self.blocks[req.block_ids[n_full]].n_tokens = covered % bs
+        for bi in range(n_full):
+            chunk = tuple(tokens[bi * bs: (bi + 1) * bs])
+            h = chain_hash(prev, chunk)
+            prev = h
+            if bi >= len(req.block_ids):
+                break
+            blk = self.blocks[req.block_ids[bi]]
+            blk.lat = now
+            blk.n_tokens = bs
+            if blk.hash is None and h not in self.hash_to_bid:
+                blk.hash = h
+                blk.task_type = req.task_type if blk.ref <= 1 else blk.task_type
+                self.hash_to_bid[h] = blk.bid
+
+    # ------------------------------------------------------------- free
+    def _release_block(self, bid: int, now: float, unfinished: bool = False) -> None:
+        blk = self.blocks[bid]
+        blk.ref -= 1
+        blk.lat = now
+        if blk.ref == 0:
+            if unfinished:
+                blk.unfinished_owners += 1
+            if blk.hash is None:
+                if unfinished:                            # lost work: re-prefill
+                    self.metrics.punished_tokens += blk.n_tokens
+                blk.n_tokens = 0
+                blk.unfinished_owners = 0
+                self.free.append(bid)                     # uncommitted: discard
+            else:
+                self._push_evictable(blk)
+
+    def free_request(self, req: Request, now: float, *, finished: bool) -> None:
+        for bid in req.block_ids:
+            self._release_block(bid, now, unfinished=not finished)
+        req.block_ids.clear()
+
+    def touch(self, req: Request, now: float) -> None:
+        for bid in req.block_ids:
+            self.blocks[bid].lat = now

@@ -1,0 +1,265 @@
+"""Echo serving engine: executes scheduler plans on a real JAX model.
+
+Continuous-batching loop (vLLM-style): each iteration the scheduler emits a
+plan (prefill chunks + decode batch + preemptions); the engine executes it
+on the paged runner, advances the clock, feeds the estimators, and records
+metrics. The clock is either the calibrated time model ("virtual" — used by
+the SLO benchmarks; deterministic and hardware-independent, exactly the
+paper's simulator methodology) or wall time ("wall" — used to calibrate).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.block_manager import BlockManager
+from repro.core.estimator import MemoryPredictor, TimeModel
+from repro.core.policies import PolicyConfig
+from repro.core.radix_pool import OfflinePool
+from repro.core.request import Request, RequestState, TaskType
+from repro.core.scheduler import Plan, Scheduler
+from repro.models.model import Model
+from repro.models.paged import PagedRunner
+
+
+@dataclass
+class IterationRecord:
+    t: float
+    n_prefill: int
+    n_decode: int
+    n_online: int
+    n_offline: int
+    iter_time: float
+    offline_tokens: int
+    online_tokens: int
+    usage: Dict[str, int] = field(default_factory=dict)
+    hit_rate: float = 0.0
+    threshold_blocks: int = 0
+
+
+@dataclass
+class EngineStats:
+    iterations: List[IterationRecord] = field(default_factory=list)
+    finished: List[Request] = field(default_factory=list)
+
+    def offline_throughput(self) -> float:
+        """Completed offline work (prompt + generated tokens of finished
+        offline requests) per second. Reused prefixes count as progress —
+        that is precisely the benefit of prefix caching."""
+        if not self.iterations:
+            return 0.0
+        done = [r for r in self.finished if not r.is_online]
+        total = sum(r.prompt_len + r.n_output for r in done)
+        # makespan of the offline work: last instant offline was active
+        t = max((r.t for r in self.iterations if r.offline_tokens > 0),
+                default=self.iterations[-1].t)
+        return total / (t + 1e-9)
+
+    def offline_computed_rate(self) -> float:
+        """Offline tokens actually computed / s (excludes cache-skipped)."""
+        if not self.iterations:
+            return 0.0
+        total = sum(r.offline_tokens for r in self.iterations)
+        return total / (self.iterations[-1].t + 1e-9)
+
+    def slo_attainment(self, kind: str = "ttft") -> float:
+        online = [r for r in self.finished if r.is_online and r.slo]
+        if not online:
+            return 1.0
+        ok = 0
+        for r in online:
+            if kind == "ttft":
+                v = r.ttft()
+                ok += (v is not None and v <= r.slo.ttft)
+            else:
+                v = r.tpot()
+                ok += (v is None or v <= r.slo.tpot)
+        return ok / len(online)
+
+
+class EchoEngine:
+    """With model+params this executes real forwards on the paged runner;
+    with ``model=None`` it is the paper's §5.4 simulator: the same scheduler
+    + KV manager loop, clocked purely by the time model (tokens fabricated
+    per-request deterministically so block hashing stays realistic)."""
+
+    def __init__(self, model: Optional[Model], params, policy: PolicyConfig, *,
+                 num_blocks: int = 256, block_size: int = 16,
+                 chunk_size: int = 64, max_pages_per_seq: int = 32,
+                 time_model: Optional[TimeModel] = None,
+                 clock: str = "virtual", seed: int = 0,
+                 max_batch_tokens: int = 2048, max_running: int = 64):
+        self.model = model
+        self.policy = policy
+        self.clock = clock
+        self.pool = OfflinePool(block_size)
+        self.bm = BlockManager(num_blocks, block_size,
+                               task_aware=policy.task_aware_kv,
+                               rc_provider=self.pool.rc)
+        self.tm = time_model or TimeModel()
+        self.scheduler = Scheduler(self.bm, self.pool, self.tm, policy,
+                                   chunk_size=chunk_size,
+                                   max_batch_tokens=max_batch_tokens,
+                                   max_running=max_running)
+        self.runner = None
+        if model is not None:
+            if set(model.cfg.attn_layers) <= {"attn", "moe"}:
+                self.runner = PagedRunner(model, params, num_blocks,
+                                          block_size, max_pages_per_seq,
+                                          chunk_size)
+            else:
+                from repro.models.state_cache import StateRunner
+                self.runner = StateRunner(model, params, num_blocks,
+                                          block_size, max_pages_per_seq,
+                                          chunk_size)
+        self.mem_pred = MemoryPredictor(window=120.0)
+        self.now = 0.0
+        self.stats = EngineStats()
+        self.pending: List[Request] = []       # arrival-time ordered
+        self._rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+        self.pending.sort(key=lambda r: r.arrival_time)
+
+    def _pull_arrivals(self) -> None:
+        while self.pending and self.pending[0].arrival_time <= self.now:
+            self.scheduler.submit(self.pending.pop(0))
+
+    # ------------------------------------------------------------- helpers
+    def _fabricate(self, req: Request) -> np.ndarray:
+        """Simulator mode: deterministic pseudo-random next-token logits
+        (per request) so generated-block hashes stay realistic."""
+        rng = np.random.default_rng((req.rid << 20) + req.n_output)
+        out = np.zeros(128, np.float32)
+        out[rng.integers(0, 128)] = 1.0
+        return out
+
+    def _emit(self, req: Request, logits: np.ndarray) -> None:
+        tok = int(np.argmax(logits))
+        req.record_token(tok, self.now)
+        if req.done:
+            self.bm.free_request(req, self.now, finished=True)
+            if req in self.scheduler.running:
+                self.scheduler.running.remove(req)
+            if self.runner is not None:
+                self.runner.release(req.rid)
+            self.stats.finished.append(req)
+
+    def _online_kv_tokens(self) -> int:
+        return sum(r.total_len for r in self.scheduler.running if r.is_online)
+
+    # ------------------------------------------------------------- step
+    def step(self) -> Optional[IterationRecord]:
+        self._pull_arrivals()
+        plan = self.scheduler.schedule(self.now)
+        if plan.n_scheduled == 0:
+            # idle: advance to next arrival
+            if self.pending:
+                self.now = max(self.now, self.pending[0].arrival_time)
+                return None
+            return None
+
+        t0 = time.perf_counter()
+        offline_tokens = 0
+        online_tokens = 0
+        emissions = []
+        if self.runner is not None:
+            for req in plan.preempted:      # drop live recurrent state
+                self.runner.release(req.rid)
+
+        # ---- prefill chunks (one by one, §5.2)
+        for req, chunk in plan.prefills:
+            start = req.computed_tokens
+            toks = req.full_tokens[start: start + chunk]
+            if self.runner is not None:
+                logits = self.runner.prefill_chunk(list(toks), start,
+                                                   req.block_ids, rid=req.rid)
+            else:
+                logits = self._fabricate(req)
+            req.computed_tokens = start + chunk
+            self.bm.commit(req, req.full_tokens, self.now)
+            if req.is_online:
+                online_tokens += chunk
+            else:
+                offline_tokens += chunk
+            if req.n_preemptions and start < req.prefill_target_len:
+                req.recomputed_tokens += chunk
+            if req.prefill_done:
+                emissions.append((req, logits))
+
+        # ---- decode batch
+        decodes = [r for r in plan.decodes if not r.done]
+        if decodes:
+            if self.runner is not None:
+                tokens = [r.full_tokens[r.computed_tokens] for r in decodes]
+                bts = [r.block_ids for r in decodes]
+                pos = [r.computed_tokens for r in decodes]
+                logits = self.runner.decode(tokens, bts, pos,
+                                            rids=[r.rid for r in decodes])
+            else:
+                logits = np.stack([self._fabricate(r) for r in decodes])
+            for i, req in enumerate(decodes):
+                req.computed_tokens += 1
+                self.bm.commit(req, req.full_tokens, self.now)
+                if req.is_online:
+                    online_tokens += 1
+                else:
+                    offline_tokens += 1
+                emissions.append((req, logits[i]))
+
+        wall = time.perf_counter() - t0
+        spans = [(r.computed_tokens - c, r.computed_tokens)
+                 for r, c in plan.prefills]
+        dlens = [r.total_len for r in decodes]
+        iter_time = (self.tm.batch_time(spans, dlens)
+                     if self.clock == "virtual" else wall)
+        self.now += iter_time
+        for req, lg in emissions:               # tokens arrive at iteration end
+            self._emit(req, lg)
+
+        # ---- estimator feedback + threshold update (§5.3)
+        online_kv = self._online_kv_tokens()
+        self.mem_pred.observe(self.now, online_kv)
+        if self.policy.task_aware_kv:
+            self.bm.threshold_blocks = self.mem_pred.threshold_blocks(
+                self.bm.num_blocks, self.bm.block_size, online_kv,
+                self.bm.clean_evictable_count())
+        rec = IterationRecord(
+            t=self.now,
+            n_prefill=len(plan.prefills),
+            n_decode=len(decodes),
+            n_online=sum(1 for r in self.scheduler.running if r.is_online),
+            n_offline=sum(1 for r in self.scheduler.running if not r.is_online),
+            iter_time=iter_time,
+            offline_tokens=offline_tokens,
+            online_tokens=online_tokens,
+            usage=self.bm.usage_breakdown(),
+            hit_rate=self.bm.metrics.hit_rate,
+            threshold_blocks=self.bm.threshold_blocks,
+        )
+        self.stats.iterations.append(rec)
+        return rec
+
+    # ------------------------------------------------------------- loops
+    def run(self, max_iters: int = 10_000,
+            until_time: Optional[float] = None) -> EngineStats:
+        stalls = 0
+        for _ in range(max_iters):
+            if until_time is not None and self.now >= until_time:
+                break
+            if not self.pending and not self.scheduler.online_queue and \
+                    not self.scheduler.running and len(self.pool) == 0:
+                break
+            rec = self.step()
+            if rec is None and not self.pending:
+                stalls += 1
+                if stalls > 3:          # nothing schedulable: deadlock guard
+                    break
+            else:
+                stalls = 0
+        return self.stats

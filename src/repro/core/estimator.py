@@ -1,0 +1,172 @@
+"""Echo estimation toolkits (§5): execution-time model, memory predictor,
+online-trace rate predictor.
+
+Time model (Eq. 6-8):
+    T_prefill(l)  = max(alpha * l^2 + beta * l, c)
+    T_decode(L)   = gamma * max(L) + delta * mean(L)
+    T_batch       = lam * max(Tp, Td) + (1 - lam) * min(Tp, Td)
+
+Coefficients are fit from micro-benchmark samples with non-negative least
+squares (simple projected lstsq). For SSM/RG-LRU families prefill cost is
+linear: the quadratic basis column is dropped (alpha pinned to 0).
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class TimeModel:
+    alpha: float = 1e-9      # s / token^2  (prefill quadratic)
+    beta: float = 1e-6       # s / token    (prefill linear)
+    c: float = 1e-4          # s            (prefill floor)
+    gamma: float = 1e-7      # s / token    (decode max-pool)
+    delta: float = 1e-7      # s / token    (decode mean-pool)
+    d0: float = 1e-4         # s            (decode floor)
+    lam: float = 0.8         # prefill/decode overlap coefficient
+    quadratic_prefill: bool = True
+
+    # ------------------------------------------------------------ queries
+    def prefill_time(self, spans: Sequence[Tuple[int, int]]) -> float:
+        """Prefill chunks are processed one by one (§5.2).
+
+        Each span (s, e) is the token range computed this iteration; the
+        quadratic attention term for a chunk of a longer context is the
+        increment alpha*(e^2 - s^2), consistent with Eq.6 for (0, l).
+        """
+        t = 0.0
+        for s, e in spans:
+            t += max(self.alpha * (e * e - s * s) + self.beta * (e - s), self.c)
+        return t
+
+    def decode_time(self, lens: Sequence[int]) -> float:
+        if len(lens) == 0:
+            return 0.0
+        return max(self.gamma * max(lens) + self.delta * float(np.mean(lens)),
+                   self.d0)
+
+    def batch_time(self, prefill_spans: Sequence[Tuple[int, int]],
+                   decode_lens: Sequence[int]) -> float:
+        tp = self.prefill_time(prefill_spans) if prefill_spans else 0.0
+        td = self.decode_time(decode_lens) if decode_lens else 0.0
+        if tp == 0.0 or td == 0.0:
+            return tp + td
+        return self.lam * max(tp, td) + (1.0 - self.lam) * min(tp, td)
+
+    # ------------------------------------------------------------ fitting
+    def fit_prefill(self, samples: Sequence[Tuple[int, float]]) -> None:
+        """samples: (prompt_len, seconds) for single-prefill iterations.
+
+        Fit with an intercept column: on hosts where small-prefill cost is
+        dominated by a dispatch floor (flat timings), an intercept-free
+        quadratic fit extrapolates garbage; Eq.6's `c` absorbs the floor."""
+        if len(samples) < 3:
+            return
+        ls = np.array([s[0] for s in samples], np.float64)
+        ts = np.array([s[1] for s in samples], np.float64)
+        ones = np.ones_like(ls)
+        if self.quadratic_prefill:
+            basis = np.stack([ls * ls, ls, ones], axis=1)
+        else:
+            basis = np.stack([ls, ones], axis=1)
+        coef, *_ = np.linalg.lstsq(basis, ts, rcond=None)
+        coef = np.maximum(coef, 0.0)
+        if self.quadratic_prefill:
+            self.alpha, self.beta, c = map(float, coef)
+        else:
+            self.alpha = 0.0
+            self.beta, c = map(float, coef)
+        self.c = float(max(min(np.min(ts), max(c, 1e-6)), 1e-6))
+
+    def fit_decode(self, samples: Sequence[Tuple[int, float, float]]) -> None:
+        """samples: (max_len, mean_len, seconds) for decode-only batches."""
+        if len(samples) < 3:
+            return
+        mx = np.array([s[0] for s in samples], np.float64)
+        mn = np.array([s[1] for s in samples], np.float64)
+        ts = np.array([s[2] for s in samples], np.float64)
+        basis = np.stack([mx, mn, np.ones_like(mx)], axis=1)   # + floor
+        coef, *_ = np.linalg.lstsq(basis, ts, rcond=None)
+        coef = np.maximum(coef, 0.0)
+        self.gamma, self.delta = float(coef[0]), float(coef[1])
+        self.d0 = float(max(min(np.min(ts), max(float(coef[2]), 1e-6)), 1e-6))
+
+    def fit_lambda(self, samples: Sequence[Tuple[float, float, float]]) -> None:
+        """samples: (t_prefill_est, t_decode_est, seconds) for mixed batches."""
+        if not samples:
+            return
+        num, den = 0.0, 0.0
+        for tp, td, t in samples:
+            hi, lo = max(tp, td), min(tp, td)
+            if hi - lo < 1e-12:
+                continue
+            num += (t - lo) * (hi - lo)
+            den += (hi - lo) ** 2
+        if den > 0:
+            self.lam = float(min(max(num / den, 0.0), 1.5))
+
+
+@dataclass
+class MemoryPredictor:
+    """§5.3: predict online KV demand as mu + k*sigma over a sliding window."""
+    window: float = 3600.0          # seconds of history
+    k_sigma: float = 2.0
+    _obs: Deque[Tuple[float, float]] = field(default_factory=deque)
+
+    def observe(self, now: float, online_kv_tokens: float) -> None:
+        self._obs.append((now, online_kv_tokens))
+        cutoff = now - self.window
+        while self._obs and self._obs[0][0] < cutoff:
+            self._obs.popleft()
+
+    def predict(self) -> float:
+        if not self._obs:
+            return 0.0
+        vals = np.array([v for _, v in self._obs], np.float64)
+        return float(vals.mean() + self.k_sigma * vals.std())
+
+    def threshold_blocks(self, total_blocks: int, block_size: int,
+                         current_online_tokens: float = 0.0,
+                         clean_evictable_blocks: int = 0,
+                         floor_frac: float = 0.5) -> int:
+        """Running-KV cap (the §4.2 threshold): reserve headroom for the
+        predicted *increment* of online KV demand over what is resident,
+        net of blocks a burst may already evict punishment-free (dead
+        offline / finished online — evicting those costs nothing)."""
+        inc = max(self.predict() - current_online_tokens, 0.0)
+        reserve = max(int(math.ceil(inc / block_size)) - clean_evictable_blocks, 0)
+        return max(total_blocks - reserve, int(total_blocks * floor_frac))
+
+
+@dataclass
+class RatePredictor:
+    """Fig.11: predict online arrival rate from a sliding window
+    (mu + k*sigma, k=2 to cover ~95% of bursts, §5.3)."""
+    window: float = 900.0
+    k_sigma: float = 2.0
+    _arrivals: Deque[float] = field(default_factory=deque)
+
+    def observe(self, t: float) -> None:
+        self._arrivals.append(t)
+        cutoff = t - self.window
+        while self._arrivals and self._arrivals[0] < cutoff:
+            self._arrivals.popleft()
+
+    def predict_rate(self, now: float, bin_s: float = 60.0) -> float:
+        """Predicted arrivals/s = mu + sigma of per-bin counts in window."""
+        cutoff = now - self.window
+        arr = [a for a in self._arrivals if a >= cutoff]
+        if not arr:
+            return 0.0
+        nbins = max(int(self.window / bin_s), 1)
+        counts = np.zeros(nbins)
+        for a in arr:
+            b = min(int((a - cutoff) / bin_s), nbins - 1)
+            counts[b] += 1
+        per_s = counts / bin_s
+        return float(per_s.mean() + self.k_sigma * per_s.std())

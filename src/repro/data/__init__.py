@@ -1,0 +1,4 @@
+from repro.data.trace import BurstyTrace
+from repro.data.workload import make_offline_corpus, make_online_requests
+
+__all__ = ["BurstyTrace", "make_offline_corpus", "make_online_requests"]

@@ -1,0 +1,102 @@
+"""Pallas TPU chunked-prefill flash-attention kernel.
+
+Computes one prefill chunk's queries against the resident prefix + the
+chunk itself (Sarathi-style chunked prefill — the batching substrate Echo
+schedules over). Causal block-skipping: K blocks entirely above the
+diagonal are never brought into VMEM.
+
+Grid: (q_head, q_blocks, k_blocks); running-softmax scratch in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(ctx_ref,                                  # scalar prefetch
+            q_ref, k_ref, v_ref, out_ref,
+            m_ref, l_ref, acc_ref,
+            *, blk_q: int, blk_k: int, scale: float, group: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+    ctx = ctx_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute pos of q row r: ctx + iq*blk_q + r ; K col c: ik*blk_k + c
+    # block is live unless its first col exceeds the last row's position
+    last_q_pos = ctx + (iq + 1) * blk_q - 1
+
+    @pl.when(ik * blk_k <= last_q_pos)
+    def _compute():
+        q = q_ref[:, 0, :].astype(jnp.float32)        # (blk_q, hd)
+        k = k_ref[:, 0, :].astype(jnp.float32)        # (blk_k, hd)
+        v = v_ref[:, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = ctx + iq * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = ik * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _write():
+        out_ref[:, 0, :] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+                            ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("blk_q", "blk_k", "interpret"))
+def chunked_prefill_attention(q, k, v, ctx_len, *, blk_q: int = 128,
+                              blk_k: int = 128, interpret: bool = False):
+    """q (Sc,Hq,hd); k/v (T,Hkv,hd); ctx_len scalar int32 -> (Sc,Hq,hd).
+
+    Rows of k/v beyond ctx_len + Sc are padding (masked by causality).
+    Sc must divide by blk_q and T by blk_k.
+    """
+    sc, hq, hd = q.shape
+    t, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / (hd ** 0.5)
+    ctx = jnp.asarray(ctx_len, jnp.int32).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(hq, sc // blk_q, t // blk_k),
+        in_specs=[
+            pl.BlockSpec((blk_q, 1, hd), lambda h, iq, ik, c: (iq, h, 0)),
+            pl.BlockSpec((blk_k, 1, hd), lambda h, iq, ik, c: (ik, h // g, 0)),
+            pl.BlockSpec((blk_k, 1, hd), lambda h, iq, ik, c: (ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk_q, 1, hd), lambda h, iq, ik, c: (iq, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, blk_q=blk_q, blk_k=blk_k, scale=scale,
+                          group=g),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((sc, hq, hd), q.dtype),
+        interpret=interpret,
+    )(ctx, q, k, v)

@@ -1,0 +1,46 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode for
+correctness validation; on TPU they compile natively. Callers can force a
+path via ``impl`` ("pallas" | "ref").
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.chunked_prefill import chunked_prefill_attention as _pallas_chunked
+from repro.kernels.paged_attention import paged_attention as _pallas_paged
+from repro.kernels.ssd_scan import ssd_scan as _pallas_ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, impl="pallas"):
+    if impl == "ref":
+        return ref_mod.ref_paged_attention(q, k_pages, v_pages, block_tables, ctx_lens)
+    return _pallas_paged(q, k_pages, v_pages, block_tables, ctx_lens,
+                         interpret=_interpret())
+
+
+def chunked_prefill_attention(q, k, v, ctx_len, impl="pallas", blk_q=128, blk_k=128):
+    if impl == "ref":
+        return ref_mod.ref_chunked_prefill_attention(q, k, v, ctx_len)
+    return _pallas_chunked(q, k, v, ctx_len, blk_q=blk_q, blk_k=blk_k,
+                           interpret=_interpret())
+
+
+def ssd_scan(x, dt_a, b_mat, c_mat, chunk=64, impl="pallas"):
+    if impl == "ref":
+        y, fs = ref_mod.ref_ssd_sequential(x, dt_a, b_mat, c_mat)
+        return y, fs
+    return _pallas_ssd(x, dt_a, b_mat, c_mat, chunk=chunk, interpret=_interpret())
+
+
+def rglru_scan(a, b, chunk=64, impl="pallas"):
+    from repro.kernels.rglru_scan import rglru_scan as _pallas_rglru
+    if impl == "ref":
+        return ref_mod.ref_rglru_scan(a, b)
+    return _pallas_rglru(a, b, chunk=chunk, interpret=_interpret())

@@ -1,0 +1,99 @@
+"""Pallas TPU paged-attention decode kernel.
+
+TPU adaptation of vLLM's PagedAttention: the page indirection lives in the
+grid's scalar-prefetched block table — each grid step DMAs one whole KV page
+HBM->VMEM via BlockSpec index_map — so the MXU inner loop is dense flash
+attention over VMEM tiles (no per-element gather).
+
+Grid: (batch, kv_head, num_pages); flash running-softmax state in VMEM
+scratch carries across the page dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_tables_ref, ctx_lens_ref,          # scalar prefetch (SMEM)
+            q_ref, k_ref, v_ref,                     # VMEM blocks
+            out_ref,
+            m_ref, l_ref, acc_ref,                   # VMEM scratch
+            *, page_size: int, scale: float):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    npages = pl.num_programs(2)
+    ctx = ctx_lens_ref[b]
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(i * page_size < ctx)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)    # (bs, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        tok = i * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(tok < ctx, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == npages - 1)
+    def _write():
+        out_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+                         ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                    *, interpret: bool = False):
+    """q (B,Hq,hd); k/v_pages (P,bs,Hkv,hd); block_tables (B,nblk) int32;
+    ctx_lens (B,) int32 -> (B,Hq,hd)."""
+    b, hq, hd = q.shape
+    _, page_size, hkv, _ = k_pages.shape
+    g = hq // hkv
+    nblk = block_tables.shape[1]
+    qg = q.reshape(b, hkv, g, hd)
+    scale = 1.0 / (hd ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bb, h, i, bt, cl: (bb, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda bb, h, i, bt, cl: (bt[bb, i], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda bb, h, i, bt, cl: (bt[bb, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bb, h, i, bt, cl: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, page_size=page_size, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, ctx_lens, qg, k_pages, v_pages)
+    return out.reshape(b, hq, hd)

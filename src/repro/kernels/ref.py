@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel (and for the engine's CPU path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_paged_attention(q, k_pages, v_pages, block_tables, ctx_lens):
+    """Decode attention over a block-paged KV cache.
+
+    q:            (B, Hq, hd)     query for the current token
+    k/v_pages:    (P, bs, Hkv, hd) global page pool
+    block_tables: (B, nblk) int32 page ids per sequence (padded arbitrarily)
+    ctx_lens:     (B,) int32      tokens valid per sequence (incl. current)
+    Returns (B, Hq, hd).
+    """
+    b, hq, hd = q.shape
+    p, bs, hkv, _ = k_pages.shape
+    nblk = block_tables.shape[1]
+    t = nblk * bs
+    flat_k = k_pages.reshape(p * bs, hkv, hd)
+    flat_v = v_pages.reshape(p * bs, hkv, hd)
+    tok = jnp.arange(t)
+    idx = block_tables[:, tok // bs] * bs + tok % bs          # (B, T)
+    k = flat_k[idx]                                            # (B,T,Hkv,hd)
+    v = flat_v[idx]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    mask = tok[None, :] < ctx_lens[:, None]                    # (B,T)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(q.dtype), v)
+    return out.reshape(b, hq, hd)
+
+
+def ref_chunked_prefill_attention(q, k, v, ctx_len):
+    """Flash-prefill oracle: q chunk attends to resident prefix + itself.
+
+    q:       (Sc, Hq, hd)  chunk queries (absolute pos = ctx_len + i)
+    k/v:     (T, Hkv, hd)  gathered keys: prefix tokens then chunk tokens;
+                           rows >= ctx_len + Sc are padding.
+    ctx_len: scalar int32
+    Returns (Sc, Hq, hd).
+    """
+    sc, hq, hd = q.shape
+    t, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(sc, hkv, g, hd)
+    scores = jnp.einsum("skgd,tkd->kgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    i = jnp.arange(sc)[:, None]
+    j = jnp.arange(t)[None, :]
+    mask = j <= (ctx_len + i)                                  # causal w/ offset
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("kgst,tkd->skgd", probs.astype(q.dtype), v)
+    return out.reshape(sc, hq, hd)
+
+
+def ref_rglru_scan(a, b):
+    """Sequential RG-LRU recurrence oracle: h_t = a_t h_{t-1} + b_t.
+
+    a, b: (B, S, W) -> (B, S, W) fp32."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    h0 = jnp.zeros(a[:, 0].shape, jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2)
+
+
+def ref_ssd_sequential(x, dt_a, b_mat, c_mat, initial_state=None):
+    """Sequential SSD scan oracle.
+
+    x:     (B, S, H, P)  dt-scaled inputs
+    dt_a:  (B, S, H)     A*dt (negative)
+    b/c:   (B, S, N)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)). fp32 math.
+    """
+    bs, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    x = x.astype(jnp.float32)
+    dt_a = dt_a.astype(jnp.float32)
+    b_mat = b_mat.astype(jnp.float32)
+    c_mat = c_mat.astype(jnp.float32)
+    state0 = (jnp.zeros((bs, h, p, n), jnp.float32) if initial_state is None
+              else initial_state.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, at, bt, ct = inp          # (B,H,P), (B,H), (B,N), (B,N)
+        state = state * jnp.exp(at)[..., None, None] + xt[..., None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt_a.transpose(1, 0, 2),
+          b_mat.transpose(1, 0, 2), c_mat.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), final

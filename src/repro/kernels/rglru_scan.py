@@ -1,0 +1,61 @@
+"""Pallas TPU RG-LRU linear-recurrence scan kernel.
+
+h_t = a_t * h_{t-1} + b_t, elementwise over the LRU width. The recurrence
+is VPU-bound and inherently sequential in t, so the kernel optimizes the
+memory system instead: the sequence is streamed chunk-by-chunk through VMEM
+(each a/b tile read from HBM exactly once) with the carried state living in
+a VMEM scratch across the sequential innermost grid dim — the same
+state-carry pattern as ssd_scan.
+
+Grid: (batch, width_blocks, chunks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, y_ref, h_ref, *, chunk: int):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)          # (chunk, W_blk)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "blk_w"))
+def rglru_scan(a, b, *, chunk: int = 64, interpret: bool = False,
+               blk_w: int = 128):
+    """a, b: (B, S, W) -> h per step (B, S, W), fp32."""
+    bsz, s, w = a.shape
+    assert s % chunk == 0
+    blk_w = min(blk_w, w)
+    assert w % blk_w == 0
+    grid = (bsz, w // blk_w, s // chunk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, blk_w), lambda bb, wv, i: (bb, i, wv)),
+            pl.BlockSpec((1, chunk, blk_w), lambda bb, wv, i: (bb, i, wv)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, blk_w), lambda bb, wv, i: (bb, i, wv)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((blk_w,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out

@@ -1,0 +1,115 @@
+"""Co-serving driver: run the Echo engine on a reduced-family model.
+
+The full assigned configs are exercised by the dry-run (``dryrun.py``);
+this driver serves a runnable-on-CPU reduced variant with a real bursty
+online trace + offline batch corpus, and prints the paper's metrics.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+      --policy Echo --duration 30
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import (ALL_POLICIES, ECHO, SLO, EchoEngine, TimeModel)
+from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
+from repro.models import Model
+
+POLICY_BY_NAME = {p.name: p for p in ALL_POLICIES}
+
+
+def calibrate(model: Model, params, *, chunk_size=64, num_blocks=192,
+              block_size=16) -> TimeModel:
+    """Fit the Eq.6-8 coefficients by micro-benchmarking the runner (§6)."""
+    import time as _t
+
+    import numpy as np
+
+    from repro.models.paged import PagedRunner
+    runner = PagedRunner(model, params, num_blocks, block_size,
+                         max_pages_per_seq=num_blocks // 2, chunk_size=chunk_size)
+    tm = TimeModel(quadratic_prefill=model.cfg.family not in ("ssm", "hybrid"))
+    # prefill samples
+    samples = []
+    for l in (16, 32, 48, 64):
+        toks = list(range(l))
+        bt = list(range((l + block_size - 1) // block_size + 1))
+        runner.prefill_chunk(toks, 0, bt)                  # warm
+        t0 = _t.perf_counter()
+        for _ in range(3):
+            runner.prefill_chunk(toks, 0, bt)
+        samples.append((l, (_t.perf_counter() - t0) / 3))
+    tm.fit_prefill(samples)
+    # decode samples
+    dsamples = []
+    for b in (1, 4, 8):
+        toks = [1] * b
+        bts = [[i] for i in range(b)]
+        pos = [0] * b
+        runner.decode(toks, bts, pos)
+        t0 = _t.perf_counter()
+        for _ in range(3):
+            runner.decode(toks, bts, pos)
+        t = (_t.perf_counter() - t0) / 3
+        dsamples.append((1, 1.0, t))
+    tm.fit_decode(dsamples)
+    return tm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b")
+    ap.add_argument("--policy", choices=list(POLICY_BY_NAME), default="Echo")
+    ap.add_argument("--duration", type=float, default=20.0)
+    ap.add_argument("--num-blocks", type=int, default=192)
+    ap.add_argument("--online-rate", type=float, default=2.0)
+    ap.add_argument("--n-docs", type=int, default=6)
+    ap.add_argument("--questions", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    policy = POLICY_BY_NAME[args.policy]
+
+    tm = TimeModel(alpha=2e-7, beta=1e-4, c=2e-3, gamma=3e-5, delta=3e-5,
+                   d0=2e-3, lam=0.9,
+                   quadratic_prefill=cfg.family not in ("ssm", "hybrid"))
+    trace = BurstyTrace(base_rate=args.online_rate, tidal_period=4 * args.duration,
+                        seed=args.seed)
+    arrivals = trace.sample(0, args.duration)
+    online = make_online_requests(arrivals, prompt_mean=64, prompt_std=24,
+                                  max_new_mean=16, vocab=cfg.vocab_size,
+                                  slo=SLO(1.0, 0.1), seed=args.seed)
+    offline = make_offline_corpus(args.n_docs, args.questions, doc_len=160,
+                                  question_len=24, max_new=8,
+                                  vocab=cfg.vocab_size, seed=args.seed + 1)
+
+    eng = EchoEngine(model, params, policy, num_blocks=args.num_blocks,
+                     block_size=16, chunk_size=64,
+                     max_pages_per_seq=32, time_model=tm)
+    for r in online + offline:
+        eng.submit(r)
+    stats = eng.run(max_iters=100_000, until_time=args.duration * 4)
+
+    off_done = sum(1 for r in stats.finished if not r.is_online)
+    on_done = sum(1 for r in stats.finished if r.is_online)
+    print(f"policy={policy.name}")
+    print(f"online finished: {on_done}/{len(online)}  "
+          f"offline finished: {off_done}/{len(offline)}")
+    print(f"offline throughput: {stats.offline_throughput():.1f} tok/s (virtual)")
+    print(f"SLO attainment: TTFT {stats.slo_attainment('ttft'):.3f}  "
+          f"TPOT {stats.slo_attainment('tpot'):.3f}")
+    print(f"prefix cache: overall {eng.bm.metrics.hit_rate:.3f}  "
+          f"offline {eng.bm.metrics.offline_hit_rate:.3f}")
+    print(f"evictions {eng.bm.metrics.evictions}  "
+          f"punished tokens {eng.bm.metrics.punished_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""Divisibility-aware logical sharding rules + dry-run input specs.
+
+Parameters shard on the `model` axis by name-based rules (Megatron-style
+tensor parallelism + expert parallelism); activations/batches shard on
+(`pod`, `data`). Any dim not divisible by its mesh axes is replicated —
+this is what lets one rule set serve MQA (kv=1), 24-head MHA, 128-expert
+MoE etc. without per-arch special cases.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import data_axes
+from repro.models import hooks
+from repro.models.model import Model
+
+# name -> {trailing_ndim: spec_from_end}; 'model' entries are
+# divisibility-checked per tensor.
+_PARAM_RULES = {
+    "embed": {2: ("model", None)},
+    "unembed": {2: (None, "model")},
+    "mm_proj": {2: (None, None)},
+    "wq": {3: (None, "model", None)},
+    "wk": {3: (None, "model", None)},
+    "wv": {3: (None, "model", None)},
+    "wo": {3: ("model", None, None), 2: ("model", None)},   # attn / rglru
+    "w1": {2: (None, "model")},
+    "w3": {2: (None, "model")},
+    "w2": {2: ("model", None)},
+    "router": {2: (None, "model")},
+    "we1": {3: ("model", None, None)},
+    "we3": {3: ("model", None, None)},
+    "we2": {3: ("model", None, None)},
+    "z_proj": {2: (None, "model")},
+    "x_proj": {2: (None, "model")},
+    "dt_proj": {2: (None, "model")},
+    # b_proj / c_proj / conv_bc replicated (B,C are shared across heads)
+    "out_proj": {2: ("model", None)},
+    "conv_w": {2: (None, "model")},
+    "conv_x": {2: (None, "model")},
+    "wx": {2: (None, "model")},
+    "wg": {2: (None, "model")},
+}
+
+
+def _axes_fit(dim: int, axes, mesh: Mesh) -> Optional[Tuple[str, ...]]:
+    """Largest prefix of `axes` whose size product divides `dim`."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    prod = 1
+    used = []
+    for a in axes:
+        if a not in mesh.shape:
+            continue
+        if dim % (prod * mesh.shape[a]) == 0:
+            prod *= mesh.shape[a]
+            used.append(a)
+        else:
+            break
+    return tuple(used) if used else None
+
+
+def _leaf_spec(path_names, leaf, mesh: Mesh, extra_axes=()) -> P:
+    """Match on the last path name; stacked (scan) params carry extra
+    leading dims, so rules apply to the *trailing* ndim. ``extra_axes``
+    are appended after `model` on the sharded dim (ZeRO-style: optimizer
+    moments also shard across the data axes)."""
+    name = path_names[-1] if path_names else ""
+    rule = _PARAM_RULES.get(name)
+    nd = leaf.ndim
+    if rule:
+        for t_nd in sorted(rule, reverse=True):
+            if nd >= t_nd:
+                spec = rule[t_nd]
+                lead = (None,) * (nd - t_nd)
+                tail = tuple(
+                    _axes_fit(leaf.shape[nd - t_nd + i],
+                              (s,) + tuple(extra_axes) if isinstance(s, str)
+                              else s, mesh) if s else None
+                    for i, s in enumerate(spec))
+                return P(*(lead + tail))
+    return P(*((None,) * nd))
+
+
+def param_shardings(params_specs, mesh: Mesh, extra_axes=()):
+    """Pytree of NamedSharding matching the param-spec pytree."""
+    def walk(path, leaf):
+        names = [getattr(k, "key", getattr(k, "idx", None))
+                 for k in path]
+        names = [n for n in names if isinstance(n, str)]
+        return NamedSharding(mesh, _leaf_spec(names, leaf, mesh, extra_axes))
+    return jax.tree_util.tree_map_with_path(walk, params_specs)
+
+
+# --------------------------------------------------------------- hook
+_LOGICAL = {
+    "batch": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+}
+
+
+def install_hook(mesh: Mesh) -> None:
+    def hook(x, logical_axes):
+        spec = []
+        for i, (dim, name) in enumerate(zip(x.shape, logical_axes)):
+            if name == "seq_fallback":
+                # shard this (seq) dim on `model` ONLY when the tensor's
+                # head dim (the next axis named heads/kv_heads) cannot be
+                # sharded — sequence-parallel attention fallback.
+                head_i = next((j for j, n in enumerate(logical_axes)
+                               if n in ("heads", "kv_heads")), None)
+                head_ok = (head_i is not None and
+                           _axes_fit(x.shape[head_i], ("model",), mesh))
+                spec.append(None if head_ok
+                            else _axes_fit(dim, ("model",), mesh))
+                continue
+            if name is None or name not in _LOGICAL:
+                spec.append(None)
+                continue
+            spec.append(_axes_fit(dim, _LOGICAL[name], mesh))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+    hooks.set_hook(hook)
+
+
+def batch_spec(batch: int, mesh: Mesh) -> Optional[Tuple[str, ...]]:
+    return _axes_fit(batch, ("pod", "data"), mesh)
+
+
+# --------------------------------------------------------------- inputs
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """ShapeDtypeStruct stand-ins + NamedShardings for one workload shape.
+
+    Returns (args_specs: dict, args_shardings: dict) for the step function
+    of that shape kind (train/prefill: token batch; decode: token + cache).
+    """
+    model = Model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    baxes = batch_spec(b, mesh)
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(baxes, None))
+
+    if shape.kind == "train":
+        args = {"tokens": tok, "labels": tok}
+        shard = {"tokens": tok_sh, "labels": tok_sh}
+        if cfg.multimodal:
+            args["mm_embeds"] = jax.ShapeDtypeStruct(
+                (b, 256, cfg.mm_embed_dim), jnp.float32)
+            shard["mm_embeds"] = NamedSharding(mesh, P(baxes, None, None))
+        return args, shard
+
+    if shape.kind == "prefill":
+        args = {"tokens": tok}
+        shard = {"tokens": tok_sh}
+        if cfg.multimodal:
+            args["mm_embeds"] = jax.ShapeDtypeStruct(
+                (b, 256, cfg.mm_embed_dim), jnp.float32)
+            shard["mm_embeds"] = NamedSharding(mesh, P(baxes, None, None))
+        return args, shard
+
+    # decode: one new token against a cache of seq_len positions
+    cache_specs = model.make_cache(b, s, as_specs=True)
+    cache_shard = cache_shardings(model, cache_specs, mesh)
+    args = {
+        "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "cache": cache_specs,
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+    shard = {
+        "tokens": NamedSharding(mesh, P(baxes)),
+        "cache": cache_shard,
+        "pos": NamedSharding(mesh, P(baxes)),
+    }
+    return args, shard
+
+
+def cache_shardings(model: Model, cache_specs, mesh: Mesh):
+    """attn k/v (B,S,Hkv,hd): batch x data, heads x model (if divisible);
+    ssm/rglru states: batch x data, inner dims x model (if divisible)."""
+    def leaf(path, spec):
+        names = [getattr(k, "key", None) for k in path]
+        names = [n for n in names if isinstance(n, str)]
+        nd = spec.ndim
+        shape = spec.shape
+        b_dim = nd - 4 if nd >= 4 and names and names[-1] in ("k", "v") else None
+        out = [None] * nd
+        if names and names[-1] in ("k", "v"):
+            # (..., B, S, Hkv, hd): heads on model when divisible, else
+            # shard the cache SEQ dim (sequence-parallel decode attention)
+            out[nd - 4] = _axes_fit(shape[nd - 4], ("pod", "data"), mesh)
+            heads_fit = _axes_fit(shape[nd - 2], ("model",), mesh)
+            if heads_fit:
+                out[nd - 2] = heads_fit
+            else:
+                out[nd - 3] = _axes_fit(shape[nd - 3], ("model",), mesh)
+        elif names and names[-1] == "conv":
+            out[nd - 3] = _axes_fit(shape[nd - 3], ("pod", "data"), mesh)
+            out[nd - 1] = _axes_fit(shape[nd - 1], ("model",), mesh)
+        elif names and names[-1] == "ssd":
+            # (..., B, H, P, N)
+            out[nd - 4] = _axes_fit(shape[nd - 4], ("pod", "data"), mesh)
+            out[nd - 3] = _axes_fit(shape[nd - 3], ("model",), mesh)
+        elif names and names[-1] == "h":
+            out[nd - 2] = _axes_fit(shape[nd - 2], ("pod", "data"), mesh)
+            out[nd - 1] = _axes_fit(shape[nd - 1], ("model",), mesh)
+        return NamedSharding(mesh, P(*out))
+    return jax.tree_util.tree_map_with_path(leaf, cache_specs)

@@ -1,0 +1,56 @@
+"""Training driver (the train_4k substrate, reduced configs on CPU).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model
+from repro.training import adamw_init, make_train_step
+from repro.training import checkpoint as ckpt
+from repro.training.data import TokenStream
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--save", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(model, total_steps=args.steps))
+    stream = TokenStream(cfg.vocab_size, seed=args.seed)
+    mm_dim = cfg.mm_embed_dim if cfg.multimodal else None
+
+    t0 = time.time()
+    for i, batch in enumerate(stream.batches(args.batch, args.seq, mm_dim)):
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = step(params, opt, jb)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"{(time.time() - t0):.1f}s", flush=True)
+        if i + 1 >= args.steps:
+            break
+    if args.save:
+        ckpt.save(args.save, params, step=args.steps)
+        print(f"saved checkpoint to {args.save}.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""GQA attention: train / prefill / decode, full-causal or sliding-window.
+
+Decode uses a unified ring-buffer cache: the write slot is ``pos % S_cache``
+and valid slots are ``min(pos+1, S_cache)``. When ``S_cache`` >= max
+position this degenerates to an ordinary append cache; when smaller it is a
+sliding window (keys are stored post-RoPE, so slot order is irrelevant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, rms_norm
+from repro.models.hooks import constrain
+
+NEG_INF = -1e30
+
+
+def attn_init(rng, cfg, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rq, rk, rv, ro = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(rq, (d, hq, hd), d, dtype),
+        "wk": dense_init(rk, (d, hkv, hd), d, dtype),
+        "wv": dense_init(rv, (d, hkv, hd), d, dtype),
+        "wo": dense_init(ro, (hq, hd, d), hq * hd, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(params, cfg, x, cos, sin):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # "seq_fallback": if the head count doesn't divide the model axis
+    # (llama4 40H, musicgen 24H ...), shard the query sequence dim instead
+    # — sequence-parallel attention — rather than replicating the whole
+    # S^2 attention per chip. K/V stay head-sharded when divisible, else
+    # replicated (they are the smaller operand; scores/out inherit q's
+    # seq sharding).
+    q = constrain(q, ("batch", "seq_fallback", "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _grouped_scores(q, k):
+    """q (B,S,Hq,hd), k (B,T,Hkv,hd) -> scores (B,Hkv,G,S,T) in fp32."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    return scores / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+
+def _grouped_out(probs, v, dtype):
+    """probs (B,Hkv,G,S,T), v (B,T,Hkv,hd) -> (B,S,Hq,hd)."""
+    b, hkv, g, s, t = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(dtype), v)
+    return out.reshape(b, s, hkv * g, -1)
+
+
+# Context attention switches to the blockwise (flash) path above this
+# sequence length: never materializes the S^2 score tensor.
+FLASH_THRESHOLD = 2048
+FLASH_BLOCK = 1024
+
+
+def _flash_grouped(q, k, v, *, window=0, seq_lens=None, blk=None):
+    """Blockwise causal attention (running softmax over KV blocks); the
+    XLA-level analogue of kernels/chunked_prefill.py. q (B,S,Hq,hd);
+    k/v (B,S,Hkv,hd). Requires S % blk == 0."""
+    if blk is None:
+        blk = FLASH_BLOCK
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    nb = s // blk
+    qg = (q.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+          / jnp.sqrt(jnp.asarray(hd, jnp.float32)))
+    kb = k.reshape(b, nb, blk, hkv, hd)
+    vb = v.reshape(b, nb, blk, hkv, hd)
+
+    i_idx = jnp.arange(s)[:, None]                      # global q positions
+
+    def body(carry, inp):
+        m, l, acc = carry
+        jblk, k_j, v_j = inp                            # (B,blk,Hkv,hd)
+        sc = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k_j.astype(jnp.float32))        # (B,Hkv,G,S,blk)
+        j_idx = jblk * blk + jnp.arange(blk)[None, :]
+        mask = j_idx <= i_idx
+        if window:
+            mask &= (i_idx - j_idx) < window
+        if seq_lens is not None:
+            mask = mask[None] & (j_idx[None] < seq_lens[:, None, None])
+            mask = mask[:, None, None]
+        else:
+            mask = mask[None, None, None]
+        sc = jnp.where(mask, sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        alpha = jnp.exp(m - m_new)                      # (B,Hkv,G,S,1)
+        l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        alpha_t = jnp.transpose(alpha, (0, 3, 1, 2, 4))  # (B,S,Hkv,G,1)
+        acc = acc * alpha_t + jnp.einsum(
+            "bkgst,btkd->bskgd", p, v_j.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, s, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s, 1), jnp.float32)
+    acc0 = jnp.zeros((b, s, hkv, g, hd), jnp.float32)
+    from repro.models.transformer import _scan
+    (m, l, acc), _ = _scan(body, (m0, l0, acc0),
+                           (jnp.arange(nb), jnp.moveaxis(kb, 1, 0),
+                            jnp.moveaxis(vb, 1, 0)), nb)
+    denom = jnp.transpose(l, (0, 3, 1, 2, 4))           # (B,S,Hkv,G,1)
+    out = acc / jnp.maximum(denom, 1e-20)
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def attn_context(params, cfg, x, cos, sin, *, window=0, seq_lens=None,
+                 return_cache=False):
+    """Full-context attention (train / prefill). x: (B,S,d)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, cfg, x, cos, sin)
+    if s >= FLASH_THRESHOLD and s % FLASH_BLOCK == 0:
+        out = _flash_grouped(q, k, v, window=window, seq_lens=seq_lens)
+    else:
+        scores = _grouped_scores(q, k)                    # (B,Hkv,G,S,T=S)
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        mask = j <= i
+        if window:
+            mask &= (i - j) < window
+        if seq_lens is not None:                          # right-padding mask
+            mask = mask[None] & (j[None] < seq_lens[:, None, None])
+            mask = mask[:, None, None]
+        else:
+            mask = mask[None, None, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _grouped_out(probs, v, x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    cache = {"k": k, "v": v} if return_cache else None
+    return out, cache
+
+
+def attn_decode(params, cfg, x, cos, sin, cache, pos):
+    """One-token decode. x: (B,1,d); cache k/v: (B,Sc,Hkv,hd); pos: (B,) int32."""
+    b = x.shape[0]
+    s_cache = cache["k"].shape[1]
+    q, k_new, v_new = _qkv(params, cfg, x, cos, sin)      # seq dim == 1
+    slot = pos % s_cache
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+    scores = _grouped_scores(q, k)                        # (B,Hkv,G,1,Sc)
+    valid = jnp.minimum(pos + 1, s_cache)                 # (B,)
+    mask = jnp.arange(s_cache)[None, :] < valid[:, None]  # (B,Sc)
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _grouped_out(probs, v, x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, {"k": k, "v": v}

@@ -1,0 +1,89 @@
+"""Shared model components: norms, RoPE / M-RoPE, SwiGLU, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(rng, shape, in_axis_size, dtype):
+    scale = 1.0 / np.sqrt(max(in_axis_size, 1))
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(rng, shape, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_inv_freq(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def rope_angles(positions, head_dim, theta, mrope_sections=()):
+    """positions: (B, S) int32, or (3, B, S) for M-RoPE.
+
+    Returns (cos, sin) with shape (B, S, head_dim // 2), float32.
+    """
+    inv_freq = jnp.asarray(rope_inv_freq(head_dim, theta))       # (hd/2,)
+    if positions.ndim == 2:
+        ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (B,S,hd/2)
+    else:
+        # M-RoPE: half-dim index i belongs to section s(i); use position stream s.
+        assert sum(mrope_sections) == head_dim // 2, "mrope sections must cover head_dim/2"
+        sec_id = np.concatenate(
+            [np.full(n, i, np.int32) for i, n in enumerate(mrope_sections)]
+        )                                                          # (hd/2,)
+        pos = positions.astype(jnp.float32)                        # (3,B,S)
+        pos_per_dim = pos[sec_id]                                  # (hd/2,B,S)
+        ang = jnp.moveaxis(pos_per_dim, 0, -1) * inv_freq          # (B,S,hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, head_dim); cos/sin: (B, S, head_dim//2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def default_positions(batch, seq, mrope=False, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if mrope:
+        pos = jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+# ---------------------------------------------------------------- MLP
+def swiglu_init(rng, d_model, d_ff, dtype):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "w1": dense_init(r1, (d_model, d_ff), d_model, dtype),
+        "w3": dense_init(r2, (d_model, d_ff), d_model, dtype),
+        "w2": dense_init(r3, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def swiglu(params, x):
+    h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    return h @ params["w2"]

@@ -1,0 +1,26 @@
+"""Logical-axis sharding hook.
+
+Models are mesh-agnostic: they annotate intermediates with *logical* axis
+names via ``constrain``. The launcher installs a hook that maps logical
+names to mesh axes (divisibility-aware) and applies
+``jax.lax.with_sharding_constraint``. Outside pjit the hook is a no-op.
+"""
+from __future__ import annotations
+
+_HOOK = None
+
+
+def set_hook(fn) -> None:
+    global _HOOK
+    _HOOK = fn
+
+
+def clear_hook() -> None:
+    set_hook(None)
+
+
+def constrain(x, logical_axes):
+    """logical_axes: tuple of logical names (or None) per dim of ``x``."""
+    if _HOOK is None:
+        return x
+    return _HOOK(x, logical_axes)

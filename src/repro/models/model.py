@@ -1,0 +1,194 @@
+"""Model facade: init / train forward / prefill / decode over any config."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as tfm
+from repro.models.common import (default_positions, dtype_of, embed_init,
+                                 rms_norm, rope_angles)
+from repro.models.hooks import constrain
+from repro.models.ssm import ssm_dims
+from repro.models.rglru import rglru_width
+
+LONG_THRESHOLD = 1 << 18  # >= 256k context => sliding-window policy kicks in
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = dtype_of(cfg)
+
+    # ------------------------------------------------------------- params
+    def init(self, rng):
+        cfg = self.cfg
+        r_embed, r_stack, r_out, r_mm = jax.random.split(rng, 4)
+        params = {
+            "embed": embed_init(r_embed, (cfg.vocab_size, cfg.d_model), self.dtype),
+            "final_ln": jnp.ones((cfg.d_model,), self.dtype),
+            "layers": tfm.stack_init(r_stack, cfg, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = embed_init(r_out, (cfg.d_model, cfg.vocab_size), self.dtype)
+        if cfg.multimodal:
+            params["mm_proj"] = embed_init(r_mm, (cfg.mm_embed_dim, cfg.d_model), self.dtype)
+        return params
+
+    def param_specs(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------- helpers
+    def _embed(self, params, tokens, mm_embeds=None):
+        h = jnp.take(params["embed"], tokens, axis=0)
+        if mm_embeds is not None and self.cfg.multimodal:
+            fused = (mm_embeds.astype(self.dtype) @ params["mm_proj"])
+            h = jax.lax.dynamic_update_slice(h, fused, (0, 0, 0))
+        return constrain(h, ("batch", None, None))
+
+    def _logits(self, params, h):
+        h = rms_norm(h, params["final_ln"], self.cfg.norm_eps)
+        w = params["embed"].T if self.cfg.tie_embeddings else params["unembed"]
+        logits = h @ w
+        return constrain(logits, ("batch", None, "vocab"))
+
+    def _rope(self, positions):
+        cfg = self.cfg
+        if cfg.num_heads == 0:          # pure SSM: no rope
+            return (None, None)
+        return rope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                           cfg.mrope_sections)
+
+    def _positions(self, batch, seq, positions, offset=0):
+        if positions is not None:
+            return positions
+        return default_positions(batch, seq, mrope=bool(self.cfg.mrope_sections),
+                                 offset=offset)
+
+    # ------------------------------------------------------------- modes
+    def forward_train(self, params, tokens, mm_embeds=None, positions=None):
+        """tokens (B,S) -> logits (B,S,V)."""
+        b, s = tokens.shape
+        rope = self._rope(self._positions(b, s, positions))
+        h = self._embed(params, tokens, mm_embeds)
+        h, _ = tfm.stack_context(params["layers"], self.cfg, h, rope, train=True)
+        return self._logits(params, h)
+
+    def prefill(self, params, tokens, mm_embeds=None, seq_lens=None, positions=None):
+        """tokens (B,S) -> (last_logits (B,V), cache)."""
+        b, s = tokens.shape
+        rope = self._rope(self._positions(b, s, positions))
+        h = self._embed(params, tokens, mm_embeds)
+        h, caches = tfm.stack_context(params["layers"], self.cfg, h, rope,
+                                      train=False, seq_lens=seq_lens,
+                                      return_cache=True)
+        if seq_lens is not None:
+            idx = jnp.maximum(seq_lens - 1, 0)
+            h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+        else:
+            h_last = h[:, -1]
+        logits = self._logits(params, h_last[:, None])[:, 0]
+        return logits, caches
+
+    def decode_step(self, params, tokens, caches, pos):
+        """tokens (B,) int32, pos (B,) int32 -> (logits (B,V), new caches)."""
+        b = tokens.shape[0]
+        if self.cfg.mrope_sections:
+            positions = jnp.broadcast_to(pos[None, :, None], (3, b, 1))
+        else:
+            positions = pos[:, None]
+        rope = self._rope(positions)
+        h = self._embed(params, tokens[:, None])
+        h, caches = tfm.stack_decode(params["layers"], self.cfg, h, rope, caches, pos)
+        return self._logits(params, h)[:, 0], caches
+
+    # ------------------------------------------------------------- caches
+    def attn_cache_len(self, total_len: int) -> int:
+        cfg = self.cfg
+        if cfg.block_pattern:                       # hybrid local attention
+            return min(total_len, cfg.window)
+        if cfg.long_context == "sliding_window" and total_len >= LONG_THRESHOLD:
+            return min(total_len, cfg.sliding_window)
+        return total_len
+
+    def _cache_entry(self, kind, batch, total_len, make):
+        cfg = self.cfg
+        dt = self.dtype
+        if kind in ("attn", "moe"):
+            s = self.attn_cache_len(total_len)
+            shp = (batch, s, cfg.num_kv_heads, cfg.head_dim)
+            return {"k": make(shp, dt), "v": make(shp, dt)}
+        if kind == "ssm":
+            d_inner, nheads = ssm_dims(cfg)
+            conv_ch = d_inner + 2 * cfg.ssm_state
+            return {"conv": make((batch, cfg.ssm_conv, conv_ch), dt),
+                    "ssd": make((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                                jnp.float32)}
+        if kind == "rglru":
+            w = rglru_width(cfg)
+            return {"conv": make((batch, cfg.ssm_conv, w), dt),
+                    "h": make((batch, w), jnp.float32)}
+        raise ValueError(kind)
+
+    def make_cache(self, batch, total_len, as_specs=False):
+        """Cache pytree matching the segment structure (zeros or specs)."""
+        if as_specs:
+            make = lambda shp, dt: jax.ShapeDtypeStruct(shp, dt)
+        else:
+            make = lambda shp, dt: jnp.zeros(shp, dt)
+        caches = []
+        for stype, unit, n in tfm.segments(self.cfg):
+            entries = tuple(self._cache_entry(k, batch, total_len, make)
+                            for k in unit)
+            if stype == "scan":
+                if as_specs:
+                    entries = jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype),
+                        entries)
+                else:
+                    entries = jax.tree.map(
+                        lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), entries)
+            caches.append(entries)
+        return caches
+
+    def pad_cache(self, caches, prefill_len, total_len):
+        """Convert a prefill cache (seq len = prefill_len) into a decode cache
+        sized for ``total_len`` positions, preserving ring-slot semantics."""
+        def fix(entry, kind):
+            if kind not in ("attn", "moe"):
+                return entry
+            target = self.attn_cache_len(total_len)
+
+            def remap(arr):
+                s_p = arr.shape[-3]
+                if s_p <= target:
+                    pad = [(0, 0)] * arr.ndim
+                    pad[-3] = (0, target - s_p)
+                    return jnp.pad(arr, pad)
+                # window ring: keep last `target` keys at slots pos % target
+                positions = jnp.arange(s_p - target, s_p)
+                slots = positions % target
+                kept = jnp.take(arr, positions, axis=-3)
+                out = jnp.zeros(arr.shape[:-3] + (target,) + arr.shape[-2:], arr.dtype)
+                return out.at[..., slots, :, :].set(kept)
+            return jax.tree.map(remap, entry)
+
+        out = []
+        for (stype, unit, n), seg in zip(tfm.segments(self.cfg), caches):
+            out.append(tuple(fix(e, k) for e, k in zip(seg, unit)))
+        return out
+
+    def cache_bytes(self, batch, total_len) -> int:
+        specs = self.make_cache(batch, total_len, as_specs=True)
+        return sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(specs))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return _cached_model(cfg)

@@ -1,0 +1,99 @@
+"""GShard-style capacity-factor routed MoE (top-k, optional shared expert).
+
+Tokens are processed in groups of <=256 so the dispatch/combine tensors stay
+O(T * G * top_k) instead of O(T * E * global_capacity). Expert dim shards on
+the `model` mesh axis; groups shard on `data`.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, swiglu, swiglu_init
+from repro.models.hooks import constrain
+
+GROUP = 256
+
+
+def moe_init(rng, cfg, dtype):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    rr, r1, r2, r3, rs = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(rr, (d, e), d, jnp.float32),
+        "we1": dense_init(r1, (e, d, ff), d, dtype),
+        "we3": dense_init(r2, (e, d, ff), d, dtype),
+        "we2": dense_init(r3, (e, ff, d), ff, dtype),
+    }
+    if cfg.shared_expert:
+        p["shared"] = swiglu_init(rs, d, ff, dtype)
+    return p
+
+
+def _route(gates, top_k, capacity):
+    """gates: (n, G, E) fp32 softmax probs.
+
+    Returns dispatch (n,G,E,C) in gates.dtype and combine (n,G,E,C).
+    Sequential top-k assignment with per-expert capacity (GShard).
+    """
+    n, g, e = gates.shape
+    remaining = gates
+    base = jnp.zeros((n, 1, e), jnp.int32)        # tokens already in each expert
+    dispatch = jnp.zeros((n, g, e, capacity), gates.dtype)
+    combine = jnp.zeros((n, g, e, capacity), gates.dtype)
+    sel_gate_sum = jnp.zeros((n, g, 1), gates.dtype)
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)                     # (n,G)
+        onehot = jax.nn.one_hot(idx, e, dtype=gates.dtype)       # (n,G,E)
+        pos = jnp.cumsum(onehot, axis=1).astype(jnp.int32) - 1 + base
+        base = base + jnp.sum(onehot, axis=1, keepdims=True).astype(jnp.int32)
+        pos_tok = jnp.sum(pos * onehot.astype(jnp.int32), axis=-1)      # (n,G)
+        fits = (pos_tok < capacity).astype(gates.dtype)
+        slot = jax.nn.one_hot(jnp.minimum(pos_tok, capacity - 1),
+                              capacity, dtype=gates.dtype)        # (n,G,C)
+        d_k = onehot[..., None] * slot[..., None, :] * fits[..., None, None]
+        gate_val = jnp.sum(gates * onehot, axis=-1, keepdims=True)       # (n,G,1)
+        dispatch = dispatch + d_k
+        combine = combine + d_k * gate_val[..., None]
+        sel_gate_sum = sel_gate_sum + gate_val * fits[..., None]
+        remaining = remaining * (1.0 - onehot)
+    combine = combine / jnp.maximum(sel_gate_sum[..., None], 1e-9)
+    return dispatch, combine
+
+
+def moe_apply(params, cfg, x):
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    group = min(t, GROUP)
+    pad = (-t) % group
+    if pad:
+        xt = jnp.concatenate([xt, jnp.zeros((pad, d), xt.dtype)], axis=0)
+    n = xt.shape[0] // group
+    xg = xt.reshape(n, group, d)
+    xg = constrain(xg, ("batch", None, None))
+
+    logits = (xg.astype(jnp.float32) @ params["router"])         # (n,G,E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    capacity = max(int(math.ceil(group * cfg.capacity_factor * cfg.top_k
+                                 / cfg.num_experts)), 1)
+    dispatch, combine = _route(gates, cfg.top_k, capacity)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+
+    expert_in = jnp.einsum("ngec,ngd->necd", dispatch, xg)
+    expert_in = constrain(expert_in, ("batch", "experts", None, None))
+    h = jax.nn.silu(jnp.einsum("necd,edf->necf", expert_in, params["we1"]))
+    h = h * jnp.einsum("necd,edf->necf", expert_in, params["we3"])
+    expert_out = jnp.einsum("necf,efd->necd", h, params["we2"])
+    out = jnp.einsum("ngec,necd->ngd", combine, expert_out)
+
+    out = out.reshape(-1, d)
+    if pad:
+        out = out[:t]
+    out = out.reshape(b, s, d)
+    if cfg.shared_expert:
+        out = out + swiglu(params["shared"], x)
+    return out

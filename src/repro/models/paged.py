@@ -1,0 +1,217 @@
+"""Paged-KV execution path for the serving engine (attention families).
+
+KV lives in a global page pool per layer; requests reference pages through
+block tables (the BlockManager owns the indirection). On TPU the attention
+inner loops are the Pallas kernels in repro.kernels; on CPU the jnp ref
+oracles execute the same layout. Prefill is chunked (Sarathi-style) and
+decode is batched — the two batch shapes Echo's scheduler composes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as kref
+from repro.models import transformer as tfm
+from repro.models.common import rms_norm, rope_angles, swiglu
+from repro.models.model import Model
+from repro.models.moe import moe_apply
+
+
+def _write_pages(pages, flat_idx, new_k):
+    """pages (P,bs,H,hd); flat_idx (N,) into P*bs; entries >= P*bs are
+    dropped. NOTE: the drop sentinel must be positive-OOB — JAX scatter
+    *wraps* negative indices instead of dropping them."""
+    p, bs, h, hd = pages.shape
+    flat = pages.reshape(p * bs, h, hd)
+    flat = flat.at[flat_idx].set(new_k, mode="drop")
+    return flat.reshape(p, bs, h, hd)
+
+
+def _gather_pages(pages, block_table):
+    """pages (P,bs,H,hd); block_table (nblk,) -> (nblk*bs, H, hd)."""
+    p, bs, h, hd = pages.shape
+    t = block_table.shape[0] * bs
+    tok = jnp.arange(t)
+    idx = block_table[tok // bs] * bs + tok % bs
+    return pages.reshape(p * bs, h, hd)[idx]
+
+
+def _attn_prefill_paged(p, cfg, x, cos, sin, k_pages, v_pages, block_table,
+                        ctx_len, chunk_len):
+    """x (1,Sc,d). Writes chunk KV into pages, attends vs prefix+chunk."""
+    from repro.models.attention import _qkv
+    sc = x.shape[1]
+    q, k, v = _qkv(p, cfg, x, cos, sin)              # (1,Sc,H*,hd)
+    ar = jnp.arange(sc)
+    pos = ctx_len + ar
+    bs = k_pages.shape[1]
+    oob = k_pages.shape[0] * bs                  # positive-OOB drop sentinel
+    idx = block_table[pos // bs] * bs + pos % bs
+    idx = jnp.where(ar < chunk_len, idx, oob)
+    k_pages = _write_pages(k_pages, idx, k[0])
+    v_pages = _write_pages(v_pages, idx, v[0])
+    kk = _gather_pages(k_pages, block_table)
+    vv = _gather_pages(v_pages, block_table)
+    out = kref.ref_chunked_prefill_attention(q[0], kk, vv, ctx_len)
+    out = jnp.einsum("shk,hkd->sd", out, p["wo"])[None]
+    return out, k_pages, v_pages
+
+
+def _attn_decode_paged(p, cfg, x, cos, sin, k_pages, v_pages, block_tables, pos):
+    """x (B,1,d); block_tables (B,nblk); pos (B,). ctx = pos + 1."""
+    from repro.models.attention import _qkv
+    b = x.shape[0]
+    q, k, v = _qkv(p, cfg, x, cos, sin)
+    bs = k_pages.shape[1]
+    oob = k_pages.shape[0] * bs                  # positive-OOB drop sentinel
+    bidx = jnp.arange(b)
+    safe_pos = jnp.maximum(pos, 0)
+    flat_idx = block_tables[bidx, safe_pos // bs] * bs + safe_pos % bs
+    flat_idx = jnp.where(pos >= 0, flat_idx, oob)     # padded rows: drop
+    k_pages = _write_pages(k_pages, flat_idx, k[:, 0])
+    v_pages = _write_pages(v_pages, flat_idx, v[:, 0])
+    out = kref.ref_paged_attention(q[:, 0], k_pages, v_pages, block_tables,
+                                   pos + 1)
+    out = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+    return out, k_pages, v_pages
+
+
+def _block_paged(kind, p, cfg, x, rope, pages, attn_fn):
+    cos, sin = rope
+    h, kp, vp = attn_fn(p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps),
+                        cos, sin, pages["k"], pages["v"])
+    x = x + h
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + (swiglu(p["mlp"], h2) if kind == "attn"
+             else moe_apply(p["moe"], cfg, h2))
+    return x, {"k": kp, "v": vp}
+
+
+class PagedRunner:
+    """Owns the page pool and the jitted paged prefill/decode callables."""
+
+    def __init__(self, model: Model, params, num_pages: int, page_size: int,
+                 max_pages_per_seq: int, chunk_size: int):
+        cfg = model.cfg
+        kinds = set(cfg.attn_layers)
+        if not kinds <= {"attn", "moe"}:
+            raise NotImplementedError(
+                f"paged engine supports attention families, got {kinds}; "
+                "SSM/hybrid use state-snapshot caching (see DESIGN.md)")
+        self.model = model
+        self.params = params
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_pages = max_pages_per_seq
+        self.chunk_size = chunk_size
+        dt = model.dtype
+        shp = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+        self.pages = []
+        for stype, unit, n in tfm.segments(cfg):
+            seg = tuple({"k": jnp.zeros((n,) + shp, dt),
+                         "v": jnp.zeros((n,) + shp, dt)} for _ in unit)
+            self.pages.append(seg)
+        self._prefill_jit = jax.jit(self._prefill_impl)
+        self._decode_jit = jax.jit(self._decode_impl)
+
+    # ------------------------------------------------------------- impls
+    def _rope_for(self, positions):
+        cfg = self.model.cfg
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return rope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                           cfg.mrope_sections)
+
+    def _run_stack(self, params, h, rope, pages, attn_fn):
+        cfg = self.model.cfg
+        new_pages = []
+        for (stype, unit, n), seg_p, seg_pg in zip(
+                tfm.segments(cfg), params["layers"], pages):
+            if stype == "scan":
+                def body(x, xs, unit=unit):
+                    p_slice, pg_slice = xs
+                    outs = []
+                    for kind, p_k, pg_k in zip(unit, p_slice, pg_slice):
+                        x, pg = _block_paged(kind, p_k, cfg, x, rope, pg_k, attn_fn)
+                        outs.append(pg)
+                    return x, tuple(outs)
+                h, seg_new = jax.lax.scan(body, h, (seg_p, seg_pg))
+            else:
+                outs = []
+                for kind, p_k, pg_k in zip(unit, seg_p, seg_pg):
+                    h, pg = _block_paged(kind, p_k, cfg, h, rope, pg_k, attn_fn)
+                    outs.append(pg)
+                seg_new = tuple(outs)
+            new_pages.append(seg_new)
+        return h, new_pages
+
+    def _prefill_impl(self, params, tokens, ctx_len, chunk_len, block_table,
+                      pages):
+        cfg = self.model.cfg
+        sc = tokens.shape[0]
+        positions = (ctx_len + jnp.arange(sc))[None]                  # (1,Sc)
+        rope = self._rope_for(positions)
+        h = jnp.take(params["embed"], tokens[None], axis=0)
+        attn_fn = (lambda p, c, x, cos, sin, kp, vp: _attn_prefill_paged(
+            p, c, x, cos, sin, kp, vp, block_table, ctx_len, chunk_len))
+        h, pages = self._run_stack(params, h, rope, pages, attn_fn)
+        idx = jnp.maximum(chunk_len - 1, 0)
+        h_last = jax.lax.dynamic_index_in_dim(h[0], idx, 0, keepdims=False)
+        logits = self._final_logits(params, h_last[None])
+        return logits[0], pages
+
+    def _decode_impl(self, params, tokens, block_tables, pos, pages):
+        positions = jnp.maximum(pos, 0)[:, None]
+        rope = self._rope_for(positions)
+        h = jnp.take(params["embed"], tokens[:, None], axis=0)
+        attn_fn = (lambda p, c, x, cos, sin, kp, vp: _attn_decode_paged(
+            p, c, x, cos, sin, kp, vp, block_tables, pos))
+        h, pages = self._run_stack(params, h, rope, pages, attn_fn)
+        logits = self._final_logits(params, h[:, 0])
+        return logits, pages
+
+    def _final_logits(self, params, h):
+        cfg = self.model.cfg
+        h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        return h @ w
+
+    def release(self, rid: int) -> None:
+        """No per-request device state beyond the pages (owned by the
+        BlockManager); nothing to drop."""
+
+    # ------------------------------------------------------------- API
+    def prefill_chunk(self, token_chunk: Sequence[int], ctx_len: int,
+                      block_table: Sequence[int],
+                      rid: Optional[int] = None) -> np.ndarray:
+        sc = self.chunk_size
+        toks = np.zeros((sc,), np.int32)
+        toks[: len(token_chunk)] = token_chunk
+        bt = np.zeros((self.max_pages,), np.int32)
+        bt[: len(block_table)] = block_table
+        logits, self.pages = self._prefill_jit(
+            self.params, jnp.asarray(toks), jnp.int32(ctx_len),
+            jnp.int32(len(token_chunk)), jnp.asarray(bt), self.pages)
+        return np.asarray(logits)
+
+    def decode(self, tokens: Sequence[int], block_tables: List[Sequence[int]],
+               pos: Sequence[int],
+               rids: Optional[Sequence[int]] = None) -> np.ndarray:
+        b = len(tokens)
+        bpad = 1 << (b - 1).bit_length() if b > 1 else 1
+        toks = np.zeros((bpad,), np.int32)
+        toks[:b] = tokens
+        bts = np.zeros((bpad, self.max_pages), np.int32)
+        for i, bt in enumerate(block_tables):
+            bts[i, : len(bt)] = bt
+        ps = np.full((bpad,), -1, np.int32)   # -1 marks padded rows (no write)
+        ps[:b] = pos
+        logits, self.pages = self._decode_jit(
+            self.params, jnp.asarray(toks), jnp.asarray(bts),
+            jnp.asarray(ps), self.pages)
+        return np.asarray(logits[:b])

@@ -1,0 +1,85 @@
+"""RecurrentGemma / Griffin RG-LRU recurrent block [arXiv:2402.19427].
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), with
+a_t = exp(-c * softplus(Lambda) * r_t); gates r/i are per-channel diagonal
+projections of the conv output. Prefill uses an associative scan; decode is
+a single step. The temporal-mixing branch is gated by a GeLU branch
+(Griffin gated recurrent block).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+C_FACTOR = 8.0
+
+
+def rglru_width(cfg):
+    return cfg.lru_width or cfg.d_model
+
+
+def rglru_init(rng, cfg, dtype):
+    d = cfg.d_model
+    w = rglru_width(cfg)
+    r1, r2, r3, r4 = jax.random.split(rng, 4)
+    return {
+        "wx": dense_init(r1, (d, w), d, dtype),
+        "wg": dense_init(r2, (d, w), d, dtype),
+        "conv_w": dense_init(r3, (cfg.ssm_conv, w), cfg.ssm_conv, dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "lam": jnp.ones((w,), jnp.float32) * 2.0,   # softplus(2) ~ 2.1
+        "wr": jnp.ones((w,), jnp.float32),
+        "br": jnp.zeros((w,), jnp.float32),
+        "wi": jnp.ones((w,), jnp.float32),
+        "bi": jnp.zeros((w,), jnp.float32),
+        "wo": dense_init(r4, (w, d), w, dtype),
+    }
+
+
+def _gates(params, x32):
+    r = jax.nn.sigmoid(x32 * params["wr"] + params["br"])
+    i = jax.nn.sigmoid(x32 * params["wi"] + params["bi"])
+    log_a = -C_FACTOR * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    return a, mult * i * x32
+
+
+def rglru_context(params, cfg, x, *, return_cache=False):
+    """Train / prefill. x: (B,S,d) -> (B,S,d); cache = (conv, h) final states."""
+    bsz, s, _ = x.shape
+    xa = x @ params["wx"]                                    # (B,S,W)
+    k = params["conv_w"].shape[0]
+    xa_pad = jnp.pad(xa, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(xa_pad[:, i: i + s] * params["conv_w"][i][None, None]
+               for i in range(k)) + params["conv_b"][None, None]
+
+    a, b = _gates(params, conv.astype(jnp.float32))          # (B,S,W) each
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(x @ params["wg"])
+    out = (h.astype(x.dtype) * gate) @ params["wo"]
+    cache = None
+    if return_cache:
+        conv_state = jnp.pad(xa, ((0, 0), (k - 1, 0), (0, 0)))[:, -k:]
+        cache = {"conv": conv_state.astype(x.dtype), "h": h[:, -1]}
+    return out, cache
+
+
+def rglru_decode(params, cfg, x, cache):
+    """One-token decode. x: (B,1,d); cache conv (B,K,W), h (B,W) fp32."""
+    xa = (x[:, 0] @ params["wx"])                            # (B,W)
+    conv_state = jnp.concatenate([cache["conv"][:, 1:], xa[:, None]], axis=1)
+    conv = jnp.sum(conv_state * params["conv_w"][None], axis=1) + params["conv_b"][None]
+    a, b = _gates(params, conv.astype(jnp.float32))
+    h = a * cache["h"] + b
+    gate = jax.nn.gelu(x[:, 0] @ params["wg"])
+    out = (h.astype(x.dtype) * gate) @ params["wo"]
+    return out[:, None], {"conv": conv_state, "h": h}

@@ -1,0 +1,239 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD scan for train/prefill (quadratic intra-chunk, linear
+inter-chunk recurrence) and O(1)-state decode. ngroups=1 (B/C shared
+across heads), matching the 1.3B config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+from repro.models.hooks import constrain
+
+NEG_INF = -1e30
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads
+
+
+def ssm_init(rng, cfg, dtype):
+    """TPU-TP adaptation: the GPU-fused in_proj (one (d, 2*d_inner+2n+nh)
+    matmul) is split per consumer layout — x/z/dt shard with heads on the
+    `model` axis end-to-end, B/C are computed replicated directly — which
+    removes the reshard (collective-permute chains) XLA otherwise inserts
+    between the fused projection and the SSD einsums. Identical math."""
+    d = cfg.d_model
+    d_inner, nheads = ssm_dims(cfg)
+    n = cfg.ssm_state
+    r1, r2, r3, r4, r5, r6, r7, r8 = jax.random.split(rng, 8)
+    return {
+        "z_proj": dense_init(r1, (d, d_inner), d, dtype),
+        "x_proj": dense_init(r2, (d, d_inner), d, dtype),
+        "b_proj": dense_init(r3, (d, n), d, dtype),
+        "c_proj": dense_init(r4, (d, n), d, dtype),
+        "dt_proj": dense_init(r5, (d, nheads), d, dtype),
+        "conv_x": dense_init(r6, (cfg.ssm_conv, d_inner), cfg.ssm_conv, dtype),
+        "conv_bc": dense_init(r7, (cfg.ssm_conv, 2 * n), cfg.ssm_conv, dtype),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_bc_b": jnp.zeros((2 * n,), dtype),
+        "A_log": jnp.zeros((nheads,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(r8, (d_inner, d), d_inner, dtype),
+    }
+
+
+def _segsum(x):
+    """x: (..., T) -> (..., T, T) lower-triangular segment sums (else -inf)."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, d, NEG_INF)
+
+
+def ssd_chunked(x, dt_a, b_mat, c_mat, chunk, initial_state=None,
+                return_all_states=False):
+    """Chunked SSD scan.
+
+    x:    (B, S, H, P)   inputs already scaled by dt
+    dt_a: (B, S, H)      A * dt  (negative)
+    b/c:  (B, S, N)      shared across heads (ngroups = 1)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)). All math fp32.
+    """
+    bs, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+    xc = x.reshape(bs, nc, chunk, h, p).astype(jnp.float32)
+    bc = b_mat.reshape(bs, nc, chunk, n).astype(jnp.float32)
+    cc = c_mat.reshape(bs, nc, chunk, n).astype(jnp.float32)
+    ac = dt_a.reshape(bs, nc, chunk, h).transpose(0, 3, 1, 2).astype(jnp.float32)
+    a_cum = jnp.cumsum(ac, axis=-1)                               # (B,H,C,L)
+
+    # intra-chunk (quadratic within chunk)
+    el = jnp.exp(_segsum(ac))                                     # (B,H,C,L,L)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", cc, bc, el, xc)
+
+    # per-chunk output states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)               # (B,H,C,L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bc, decay_states, xc)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((bs, 1, h, p, n), jnp.float32)
+    else:
+        initial_state = initial_state[:, None].astype(jnp.float32)
+    states = jnp.concatenate([initial_state, states], axis=1)     # (B,C+1,H,P,N)
+
+    # inter-chunk recurrence
+    a_chunk = jnp.pad(a_cum[..., -1], ((0, 0), (0, 0), (1, 0)))   # (B,H,C+1)
+    decay_chunk = jnp.exp(_segsum(a_chunk))                       # (B,H,C+1,C+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    state_decay_out = jnp.exp(a_cum)                              # (B,H,C,L)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(bs, s, h, p)
+    if return_all_states:
+        return y, final_state, new_states[:, 1:]      # state after each chunk
+    return y, final_state
+
+
+def _split_proj(params, cfg, x):
+    z = x @ params["z_proj"]
+    xs = x @ params["x_proj"]
+    bc = jnp.concatenate([x @ params["b_proj"], x @ params["c_proj"]], axis=-1)
+    dt = x @ params["dt_proj"]
+    return z, xs, bc, dt
+
+
+def _postprocess(params, cfg, y, x_in, z):
+    d_inner, nheads = ssm_dims(cfg)
+    y = y + params["D"][None, None, :, None].astype(jnp.float32) * x_in.astype(jnp.float32)
+    y = y.reshape(*y.shape[:-2], d_inner).astype(z.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"]
+
+
+def _causal_conv(xs, w, b, s):
+    k = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + s] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(out + b[None, None])
+
+
+def _causal_conv_with_state(xs, w, b, s, init):
+    """init: (B, K, C) raw inputs preceding x (init[:, -1] = newest)."""
+    k = w.shape[0]
+    pad = jnp.concatenate([init[:, -(k - 1):].astype(xs.dtype), xs], axis=1)
+    out = sum(pad[:, i: i + s] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(out + b[None, None])
+
+
+def ssm_context(params, cfg, x, *, return_cache=False, initial=None,
+                boundary_states=False):
+    """Train / prefill. x: (B,S,d). Cache = final (conv, ssd) states.
+
+    ``initial``: optional {"conv": (B,K,C), "ssd": (B,H,P,N)} resume state
+    (Echo's state-snapshot prefix caching for attention-free archs).
+    ``boundary_states=True`` additionally returns the SSD state after every
+    ssm_chunk boundary (S must then be a chunk multiple) plus the raw conv
+    inputs, so the engine can snapshot block-granular states.
+    """
+    bsz, s, _ = x.shape
+    d_inner, nheads = ssm_dims(cfg)
+    n = cfg.ssm_state
+    z, xs, bc, dt = _split_proj(params, cfg, x)
+    k = params["conv_x"].shape[0]
+    if initial is not None:
+        init_x = initial["conv"][..., :d_inner]
+        init_bc = initial["conv"][..., d_inner:]
+        conv_x = _causal_conv_with_state(xs, params["conv_x"],
+                                         params["conv_x_b"], s, init_x)
+        conv_bc = _causal_conv_with_state(bc, params["conv_bc"],
+                                          params["conv_bc_b"], s, init_bc)
+    else:
+        conv_x = _causal_conv(xs, params["conv_x"], params["conv_x_b"], s)
+        conv_bc = _causal_conv(bc, params["conv_bc"], params["conv_bc_b"], s)
+    x_in = conv_x.reshape(bsz, s, nheads, cfg.ssm_head_dim)
+    b_mat = conv_bc[..., :n]
+    c_mat = conv_bc[..., n:]
+    x_in = constrain(x_in, ("batch", None, "heads", None))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None])
+    a = -jnp.exp(params["A_log"])                            # (H,)
+    pad = (-s) % cfg.ssm_chunk
+    if pad:
+        # dt=0 on padding => decay 1 and zero input: identity on the state
+        x_in_p = jnp.pad(x_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_p = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_p = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    else:
+        x_in_p, b_p, c_p, dt_p = x_in, b_mat, c_mat, dt
+    init_ssd = initial["ssd"] if initial is not None else None
+    res = ssd_chunked(
+        x_in_p.astype(jnp.float32) * dt_p[..., None], dt_p * a[None, None],
+        b_p, c_p, cfg.ssm_chunk, initial_state=init_ssd,
+        return_all_states=boundary_states)
+    if boundary_states:
+        y, final_state, all_states = res
+    else:
+        y, final_state = res
+    if pad:
+        y = y[:, :s]
+    out = _postprocess(params, cfg, y, x_in, z)
+    xbc = jnp.concatenate([xs, bc], axis=-1)              # raw conv inputs
+    if initial is not None:
+        xbc_full = jnp.concatenate(
+            [initial["conv"][:, -(k - 1):].astype(xbc.dtype), xbc], axis=1)
+    else:
+        xbc_full = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    cache = None
+    if return_cache:
+        cache = {"conv": xbc_full[:, -k:].astype(x.dtype),
+                 "ssd": final_state.astype(jnp.float32)}
+    if boundary_states:
+        # conv raw-input window ending at each chunk boundary i:
+        # xbc_full[:, (i+1)*chunk - 1 : (i+1)*chunk - 1 + k]  (k-1 lead + k..)
+        nc = s // cfg.ssm_chunk
+        idx = (jnp.arange(1, nc + 1) * cfg.ssm_chunk)[:, None] + \
+            jnp.arange(k)[None, :] - 1                     # (nc, K)
+        conv_bounds = jnp.take(xbc_full, idx.reshape(-1), axis=1)
+        conv_bounds = conv_bounds.reshape(xbc.shape[0], nc, k, -1)
+        return out, cache, {"ssd": all_states, "conv": conv_bounds}
+    return out, cache
+
+
+def ssm_decode(params, cfg, x, cache):
+    """One-token decode. x: (B,1,d); cache conv (B,K,C), ssd (B,H,P,N)."""
+    bsz = x.shape[0]
+    d_inner, nheads = ssm_dims(cfg)
+    n = cfg.ssm_state
+    z, xs, bc, dt = _split_proj(params, cfg, x[:, 0])        # (B, ...)
+    xbc = jnp.concatenate([xs, bc], axis=-1)
+    conv_state = jnp.concatenate([cache["conv"][:, 1:], xbc[:, None]], axis=1)
+    conv_w = jnp.concatenate([params["conv_x"], params["conv_bc"]], axis=-1)
+    conv_b = jnp.concatenate([params["conv_x_b"], params["conv_bc_b"]], axis=-1)
+    conv = jnp.sum(conv_state * conv_w[None], axis=1) + conv_b[None]
+    conv = jax.nn.silu(conv)
+    x_in = conv[..., :d_inner].reshape(bsz, nheads, cfg.ssm_head_dim)
+    b_mat = conv[..., d_inner: d_inner + n].astype(jnp.float32)
+    c_mat = conv[..., d_inner + n:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a[None])                            # (B,H)
+    xbar = x_in.astype(jnp.float32) * dt[..., None]          # (B,H,P)
+    h_new = (cache["ssd"] * decay[..., None, None]
+             + xbar[..., None] * b_mat[:, None, None, :])    # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c_mat)             # (B,H,P)
+    out = _postprocess(params, cfg, y[:, None], x_in[:, None], z[:, None])
+    return out, {"conv": conv_state, "ssd": h_new}

@@ -1,0 +1,169 @@
+"""State-snapshot serving path for attention-free (SSM) models.
+
+Echo's prefix caching adapted per DESIGN.md §Arch-applicability: instead of
+paged KV, the cache pool stores the recurrent state snapshot *after every
+block_size tokens* (block_size == cfg.ssm_chunk, so SSD chunk boundaries
+line up with BlockManager blocks). A prefix hit resumes from the snapshot
+of the last cached block; eviction priorities / threshold / RC apply to
+snapshot slots exactly as to KV blocks — the BlockManager is unchanged.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.common import rms_norm
+from repro.models.model import Model
+from repro.models.ssm import ssm_context
+
+
+class StateRunner:
+    """Engine runner for recurrent-state configs: pure SSM (mamba2) and
+    hybrid (recurrentgemma — RG-LRU states + *bounded* local-attention
+    window rings; the full snapshot stays fixed-size, so block-boundary
+    snapshotting works identically). Snapshot pool is a host dict
+    bid -> state pytree (engine scale is tiny; slots are overwritten when
+    the BlockManager reuses a block id, so stale entries are harmless).
+
+    Pure-SSM chunks run through a jitted block-aligned span function (SSD
+    chunk scan with boundary capture); hybrid configs step token-by-token
+    through decode_step (correct; CPU-test scale)."""
+
+    def __init__(self, model: Model, params, num_blocks: int, block_size: int,
+                 max_pages_per_seq: int, chunk_size: int):
+        cfg = model.cfg
+        kinds = set(cfg.attn_layers)
+        if not kinds <= {"ssm", "rglru", "attn"}:
+            raise NotImplementedError("StateRunner: ssm/hybrid families only")
+        if kinds == {"ssm"}:
+            assert block_size == cfg.ssm_chunk, \
+                "block_size must equal ssm_chunk so snapshots align with blocks"
+        self._pure_ssm = kinds == {"ssm"}
+        assert chunk_size % block_size == 0
+        self.model = model
+        self.params = params
+        self.block_size = block_size
+        # hybrid: the attention ring must cover the local window
+        self._state_len = 1 if self._pure_ssm else max(cfg.window, 1)
+        self.pool: Dict[int, object] = {}       # bid -> state pytree (numpy)
+        self.live: Dict[int, object] = {}       # rid -> state pytree (jnp)
+        self._span_jit = {}
+        self._decode_jit = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------- states
+    def _zeros_state(self):
+        return self.model.make_cache(1, self._state_len)
+
+    def _span_fn(self, n: int):
+        """Jitted: consume n (block-aligned) tokens from a state. Returns
+        (last_logits (V,), final_state, boundaries: tuple of states)."""
+        if n in self._span_jit:
+            return self._span_jit[n]
+        model, cfg = self.model, self.model.cfg
+        bs = self.block_size
+        nc = n // bs
+
+        def span(params, tokens, state):
+            h = jnp.take(params["embed"], tokens[None], axis=0)   # (1,n,d)
+            new_segs, bound_segs = [], []
+            for (stype, unit, cnt), seg_p, seg_s in zip(
+                    tfm.segments(cfg), params["layers"], state):
+
+                def body(hh, xs):
+                    p_k, st_k = xs
+                    out, cache, bounds = ssm_context(
+                        p_k["ssm"], cfg,
+                        rms_norm(hh, p_k["ln"], cfg.norm_eps),
+                        return_cache=True, initial=st_k,
+                        boundary_states=True)
+                    per_block = tuple(
+                        {"conv": bounds["conv"][:, i].astype(cache["conv"].dtype),
+                         "ssd": bounds["ssd"][:, i]}
+                        for i in range(nc))
+                    return hh + out, (cache, per_block)
+
+                if stype == "scan":
+                    h, (new_s, bounds) = tfm._scan(body, h,
+                                                   (seg_p[0], seg_s[0]), cnt)
+                    new_segs.append((new_s,))
+                    bound_segs.append((bounds,))
+                else:
+                    outs, bnds = [], []
+                    for p_k, st_k in zip(seg_p, seg_s):
+                        h, (c, bd) = body(h, (p_k, st_k))
+                        outs.append(c)
+                        bnds.append(bd)
+                    new_segs.append(tuple(outs))
+                    bound_segs.append(tuple(bnds))
+            logits = model._logits(params, h[:, -1][:, None])[:, 0]
+            # restructure: boundaries[i] has the same pytree shape as state
+            boundaries = tuple(
+                [tuple(jax.tree.map(lambda t: t, kb[i]) for kb in seg)
+                 for seg in bound_segs]
+                for i in range(nc))
+            return logits[0], new_segs, boundaries
+
+        fn = jax.jit(span)
+        self._span_jit[n] = fn
+        return fn
+
+    # ------------------------------------------------------------- API
+    def prefill_chunk(self, token_chunk: Sequence[int], ctx_len: int,
+                      block_table: Sequence[int], rid: Optional[int] = None):
+        bs = self.block_size
+        assert ctx_len % bs == 0, "resume points are block-aligned"
+        if rid in self.live:
+            state = self.live[rid]
+        elif ctx_len > 0 and block_table[ctx_len // bs - 1] in self.pool:
+            state = jax.tree.map(jnp.asarray,
+                                 self.pool[block_table[ctx_len // bs - 1]])
+        else:
+            assert ctx_len == 0, "resume snapshot missing"
+            state = self._zeros_state()
+
+        toks = list(token_chunk)
+        full = (len(toks) // bs * bs) if self._pure_ssm else 0
+        logits = None
+        if full:
+            fn = self._span_fn(full)
+            logits, state, boundaries = fn(
+                self.params, jnp.asarray(toks[:full], jnp.int32), state)
+            first_block = ctx_len // bs
+            for i, bstate in enumerate(boundaries):
+                bid = block_table[first_block + i]
+                self.pool[bid] = jax.tree.map(np.asarray, bstate)
+        for j, t in enumerate(toks[full:]):
+            p = ctx_len + full + j
+            lg, state = self._decode_jit(self.params,
+                                         jnp.asarray([t], jnp.int32),
+                                         state, jnp.asarray([p], jnp.int32))
+            logits = lg[0]
+            if (p + 1) % bs == 0 and (p + 1) // bs - 1 < len(block_table):
+                self.pool[block_table[(p + 1) // bs - 1]] = \
+                    jax.tree.map(np.asarray, state)
+        self.live[rid] = state
+        return np.asarray(logits)
+
+    def decode(self, tokens: Sequence[int], block_tables: List[Sequence[int]],
+               pos: Sequence[int], rids: Optional[Sequence[int]] = None):
+        bs = self.block_size
+        out = np.zeros((len(tokens), self.model.cfg.vocab_size), np.float32)
+        for i, (t, bt, p, rid) in enumerate(zip(tokens, block_tables, pos, rids)):
+            state = self.live.get(rid)
+            if state is None:
+                state = self._zeros_state()
+            lg, state = self._decode_jit(self.params,
+                                         jnp.asarray([t], jnp.int32), state,
+                                         jnp.asarray([p], jnp.int32))
+            self.live[rid] = state
+            if (p + 1) % bs == 0 and (p + 1) // bs - 1 < len(bt):
+                self.pool[bt[(p + 1) // bs - 1]] = jax.tree.map(np.asarray, state)
+            out[i] = np.asarray(lg[0])
+        return out
+
+    def release(self, rid: int) -> None:
+        self.live.pop(rid, None)

@@ -1,0 +1,202 @@
+"""Generic decoder stack: per-family block dispatch + lax.scan over layers.
+
+Layers are grouped into *segments*: a homogeneous (or pattern-repeating)
+run scanned with stacked parameters, plus an optional unrolled remainder
+(e.g. recurrentgemma's 38 = 12 x (rglru, rglru, attn) + 2 x rglru).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import rms_norm, swiglu, swiglu_init
+from repro.models.moe import moe_apply, moe_init
+
+
+# Unroll switch: the dry-run's roofline probes compile small unrolled stacks
+# because XLA cost_analysis counts a while-loop body once (not x trips).
+_UNROLL = False
+
+
+def set_unroll(flag: bool) -> None:
+    global _UNROLL
+    _UNROLL = flag
+
+
+def _scan(body, carry, xs, n):
+    if not _UNROLL:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ----------------------------------------------------------------- segments
+def segments(cfg):
+    """Returns list of ('scan', unit, n) / ('unroll', kinds) entries."""
+    kinds = cfg.attn_layers
+    if cfg.block_pattern:
+        unit = tuple(cfg.block_pattern)
+        n = len(kinds) // len(unit)
+        segs = [("scan", unit, n)]
+        rem = kinds[n * len(unit):]
+        if rem:
+            segs.append(("unroll", tuple(rem), 1))
+        return segs
+    return [("scan", (kinds[0],), len(kinds))]
+
+
+# ----------------------------------------------------------------- blocks
+def block_init(kind, rng, cfg, dtype):
+    r1, r2 = jax.random.split(rng)
+    d = cfg.d_model
+    if kind == "attn":
+        return {"ln1": jnp.ones((d,), dtype),
+                "attn": attn_mod.attn_init(r1, cfg, dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "mlp": swiglu_init(r2, d, cfg.d_ff, dtype)}
+    if kind == "moe":
+        return {"ln1": jnp.ones((d,), dtype),
+                "attn": attn_mod.attn_init(r1, cfg, dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "moe": moe_init(r2, cfg, dtype)}
+    if kind == "ssm":
+        return {"ln": jnp.ones((d,), dtype),
+                "ssm": ssm_mod.ssm_init(r1, cfg, dtype)}
+    if kind == "rglru":
+        return {"ln1": jnp.ones((d,), dtype),
+                "rglru": rglru_mod.rglru_init(r1, cfg, dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "mlp": swiglu_init(r2, d, cfg.d_ff, dtype)}
+    raise ValueError(kind)
+
+
+def _attn_window(cfg):
+    return cfg.window if cfg.block_pattern else 0
+
+
+def block_context(kind, p, cfg, x, rope, *, seq_lens=None, return_cache=False):
+    cos, sin = rope
+    if kind in ("attn", "moe"):
+        h, cache = attn_mod.attn_context(
+            p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps), cos, sin,
+            window=_attn_window(cfg), seq_lens=seq_lens, return_cache=return_cache)
+        x = x + h
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + (swiglu(p["mlp"], h2) if kind == "attn" else moe_apply(p["moe"], cfg, h2))
+        return x, cache
+    if kind == "ssm":
+        h, cache = ssm_mod.ssm_context(
+            p["ssm"], cfg, rms_norm(x, p["ln"], cfg.norm_eps),
+            return_cache=return_cache)
+        return x + h, cache
+    if kind == "rglru":
+        h, cache = rglru_mod.rglru_context(
+            p["rglru"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps),
+            return_cache=return_cache)
+        x = x + h
+        x = x + swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, cache
+    raise ValueError(kind)
+
+
+def block_decode(kind, p, cfg, x, rope, cache, pos):
+    cos, sin = rope
+    if kind in ("attn", "moe"):
+        h, cache = attn_mod.attn_decode(
+            p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps), cos, sin, cache, pos)
+        x = x + h
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + (swiglu(p["mlp"], h2) if kind == "attn" else moe_apply(p["moe"], cfg, h2))
+        return x, cache
+    if kind == "ssm":
+        h, cache = ssm_mod.ssm_decode(p["ssm"], cfg, rms_norm(x, p["ln"], cfg.norm_eps), cache)
+        return x + h, cache
+    if kind == "rglru":
+        h, cache = rglru_mod.rglru_decode(
+            p["rglru"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps), cache)
+        x = x + h
+        x = x + swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, cache
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------- stacks
+def stack_init(rng, cfg, dtype):
+    segs = []
+    for si, seg in enumerate(segments(cfg)):
+        stype, unit, n = seg
+        rng, sub = jax.random.split(rng)
+        if stype == "scan":
+            rngs = jax.random.split(sub, n)
+            stacked = tuple(
+                jax.vmap(lambda r, k=kind, i=ki: block_init(k, jax.random.fold_in(r, i), cfg, dtype))(rngs)
+                for ki, kind in enumerate(unit))
+            segs.append(stacked)
+        else:
+            rngs = jax.random.split(sub, len(unit))
+            segs.append(tuple(block_init(kind, rngs[i], cfg, dtype)
+                              for i, kind in enumerate(unit)))
+    return segs
+
+
+def stack_context(params_segs, cfg, x, rope, *, train, seq_lens=None,
+                  return_cache=False):
+    """Apply all layers in context mode. Returns (x, caches or None)."""
+    caches = []
+    for seg_def, seg_p in zip(segments(cfg), params_segs):
+        stype, unit, n = seg_def
+        if stype == "scan":
+            def body(h, p_slice, unit=unit):
+                outs = []
+                for kind, p_k in zip(unit, p_slice):
+                    h, c = block_context(kind, p_k, cfg, h, rope,
+                                         seq_lens=seq_lens,
+                                         return_cache=return_cache)
+                    outs.append(c)
+                return h, (tuple(outs) if return_cache else None)
+            if train:
+                body = jax.checkpoint(body)
+            x, seg_cache = _scan(body, x, seg_p, n)
+        else:
+            outs = []
+            for kind, p_k in zip(unit, seg_p):
+                x, c = block_context(kind, p_k, cfg, x, rope,
+                                     seq_lens=seq_lens, return_cache=return_cache)
+                outs.append(c)
+            seg_cache = tuple(outs) if return_cache else None
+        caches.append(seg_cache)
+    return x, (caches if return_cache else None)
+
+
+def stack_decode(params_segs, cfg, x, rope, caches, pos):
+    new_caches = []
+    for seg_def, seg_p, seg_c in zip(segments(cfg), params_segs, caches):
+        stype, unit, n = seg_def
+        if stype == "scan":
+            def body(h, xs, unit=unit):
+                p_slice, c_slice = xs
+                outs = []
+                for kind, p_k, c_k in zip(unit, p_slice, c_slice):
+                    h, c = block_decode(kind, p_k, cfg, h, rope, c_k, pos)
+                    outs.append(c)
+                return h, tuple(outs)
+            x, seg_new = _scan(body, x, (seg_p, seg_c), n)
+        else:
+            outs = []
+            for kind, p_k, c_k in zip(unit, seg_p, seg_c):
+                x, c = block_decode(kind, p_k, cfg, x, rope, c_k, pos)
+                outs.append(c)
+            seg_new = tuple(outs)
+        new_caches.append(seg_new)
+    return x, new_caches

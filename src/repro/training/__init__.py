@@ -1,0 +1,5 @@
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update, cosine_lr
+from repro.training.train_step import loss_fn, make_train_step
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_lr",
+           "loss_fn", "make_train_step"]

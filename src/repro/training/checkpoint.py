@@ -1,0 +1,33 @@
+"""Pytree <-> .npz checkpointing (no orbax dependency)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def save(path: str, tree: Any, step: int = 0) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(path if path.endswith(".npz") else path + ".npz",
+             __treedef__=np.frombuffer(
+                 json.dumps({"n": len(leaves), "step": step}).encode(),
+                 dtype=np.uint8),
+             **arrays)
+
+
+def restore(path: str, like: Any) -> Tuple[Any, int]:
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    meta = json.loads(bytes(data["__treedef__"]).decode())
+    leaves_like, treedef = jax.tree.flatten(like)
+    assert meta["n"] == len(leaves_like), "checkpoint/model structure mismatch"
+    leaves = [data[f"leaf_{i}"] for i in range(meta["n"])]
+    leaves = [np.asarray(a).astype(l.dtype) if hasattr(l, "dtype") else a
+              for a, l in zip(leaves, leaves_like)]
+    return jax.tree.unflatten(treedef, leaves), meta["step"]

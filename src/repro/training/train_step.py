@@ -1,0 +1,41 @@
+"""Causal-LM training step (the train_4k workload shape)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.optimizer import adamw_update, cosine_lr
+
+
+def loss_fn(model: Model, params, tokens, labels, mm_embeds=None):
+    logits = model.forward_train(params, tokens, mm_embeds=mm_embeds)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = labels >= 0
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def make_train_step(model: Model, *, peak_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``batch`` = {"tokens": (B,S), "labels": (B,S)} (+ "mm_embeds" for
+    multimodal configs). Jit/pjit is applied by the caller (the launcher
+    decides shardings)."""
+
+    def train_step(params, opt_state, batch):
+        mm = batch.get("mm_embeds")
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch["tokens"], batch["labels"], mm)
+        )(params)
+        lr = cosine_lr(opt_state.step, peak=peak_lr, warmup=warmup,
+                       total=total_steps)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state, lr=lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    return train_step

@@ -1,0 +1,24 @@
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig
+
+# NOTE: no XLA_FLAGS here — tests and benches see 1 device; only
+# launch/dryrun.py forces 512 host devices (and only in its own process).
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return ModelConfig(
+        name="tiny-dense", family="dense", source="test",
+        num_layers=2, d_model=64, vocab_size=128,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        dtype="float32", rope_theta=10_000.0)
+
+
+@pytest.fixture(scope="session")
+def tiny_model(tiny_cfg):
+    from repro.models import Model
+    m = Model(tiny_cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return m, params

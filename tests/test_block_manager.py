@@ -1,0 +1,163 @@
+"""BlockManager unit + property tests (§4.2 semantics)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.block_manager import (BlockManager, ONLINE_FINISHED_PRIORITY,
+                                      chain_hash)
+from repro.core.request import Request, TaskType
+
+
+def _req(tokens, task=TaskType.OFFLINE, max_new=4):
+    r = Request(prompt=tuple(tokens), max_new_tokens=max_new, task_type=task)
+    r.admit()
+    return r
+
+
+def test_prefix_probe_and_hit():
+    bm = BlockManager(16, 4)
+    r1 = _req(range(12))
+    assert bm.allocate(r1, 12, r1.full_tokens, 0.0) == 0
+    r1.computed_tokens = 12
+    bm.commit(r1, r1.full_tokens, 0.0)
+    assert bm.probe_prefix(tuple(range(12))) == 12
+    assert bm.probe_prefix(tuple(range(8))) == 8
+    assert bm.probe_prefix(tuple(range(4)) + (99, 98, 97, 96)) == 4
+    r2 = _req(tuple(range(8)) + (55, 56, 57, 58))
+    hits = bm.allocate(r2, 12, r2.full_tokens, 1.0)
+    assert hits == 8
+    assert bm.metrics.hit_blocks == 2
+
+
+def test_only_leading_prefix_hits():
+    bm = BlockManager(16, 4)
+    r1 = _req(range(8))
+    bm.allocate(r1, 8, r1.full_tokens, 0.0)
+    r1.computed_tokens = 8
+    bm.commit(r1, r1.full_tokens, 0.0)
+    # different first block, same second block content: must NOT hit
+    r2 = _req((9, 9, 9, 9) + tuple(range(4, 8)))
+    hits = bm.allocate(r2, 8, r2.full_tokens, 1.0)
+    assert hits == 0
+
+
+def test_priority_eviction_order():
+    """rc>0 offline outlives finished-online outlives dead offline."""
+    bm = BlockManager(3, 4, task_aware=True, rc_provider=lambda h: 0)
+    # dead offline block
+    r_off = _req(range(4))
+    bm.allocate(r_off, 4, r_off.full_tokens, 0.0)
+    r_off.computed_tokens = 4
+    bm.commit(r_off, r_off.full_tokens, 0.0)
+    bm.free_request(r_off, 1.0, finished=True)
+    # finished online block (newer LAT)
+    r_on = _req((50, 51, 52, 53), TaskType.ONLINE)
+    bm.allocate(r_on, 4, r_on.full_tokens, 2.0)
+    r_on.computed_tokens = 4
+    bm.commit(r_on, r_on.full_tokens, 2.0)
+    bm.free_request(r_on, 3.0, finished=True)
+    # rc>0 offline block (oldest LAT -> LRU would evict it first!)
+    rc_map = {}
+    bm.rc_provider = lambda h: rc_map.get(h, 0)
+    r_shared = _req((70, 71, 72, 73))
+    bm.allocate(r_shared, 4, r_shared.full_tokens, 0.5)
+    r_shared.computed_tokens = 4
+    bm.commit(r_shared, r_shared.full_tokens, 0.5)
+    h = chain_hash(0, (70, 71, 72, 73))
+    rc_map[h] = 3
+    bm.free_request(r_shared, 0.6, finished=True)
+
+    # allocate a new request needing 2 blocks: must evict dead offline first,
+    # then finished online; the rc>0 block must survive
+    r_new = _req((90, 91, 92, 93, 94, 95, 96, 97))
+    assert bm.allocate(r_new, 8, r_new.full_tokens, 5.0) is not None
+    assert h in bm.hash_to_bid, "rc>0 offline block must be retained"
+    assert bm.metrics.evictions == 2
+
+
+def test_lru_mode_ignores_priorities():
+    bm = BlockManager(2, 4, task_aware=False, rc_provider=lambda h: 99)
+    r1 = _req(range(4))
+    bm.allocate(r1, 4, r1.full_tokens, 0.0)
+    r1.computed_tokens = 4
+    bm.commit(r1, r1.full_tokens, 0.0)
+    bm.free_request(r1, 1.0, finished=True)
+    r2 = _req((9, 8, 7, 6), TaskType.ONLINE)
+    bm.allocate(r2, 4, r2.full_tokens, 2.0)
+    r2.computed_tokens = 4
+    bm.commit(r2, r2.full_tokens, 2.0)
+    bm.free_request(r2, 3.0, finished=True)
+    # LRU: evicts r1's block (older) regardless of rc
+    r3 = _req((1, 2, 3, 4))
+    bm.allocate(r3, 4, r3.full_tokens, 4.0)
+    h1 = chain_hash(0, (0, 1, 2, 3))
+    h2 = chain_hash(0, (9, 8, 7, 6))
+    assert h1 not in bm.hash_to_bid
+    assert h2 in bm.hash_to_bid
+
+
+def test_threshold_blocks_running_growth():
+    bm = BlockManager(8, 4, task_aware=True)
+    bm.threshold_blocks = 2
+    r = _req(range(16))
+    res = bm.allocate(r, 16, r.full_tokens, 0.0, respect_threshold=True)
+    assert res is None, "threshold must reject growth beyond cap"
+    assert len(r.block_ids) == 0, "failed allocation must roll back"
+    res = bm.allocate(r, 16, r.full_tokens, 0.0, respect_threshold=False)
+    assert res is not None
+
+
+def test_punishment_accounting():
+    rc_map = {}
+    bm = BlockManager(1, 4, task_aware=True, rc_provider=lambda h: rc_map.get(h, 0))
+    r1 = _req(range(4))
+    bm.allocate(r1, 4, r1.full_tokens, 0.0)
+    r1.computed_tokens = 4
+    bm.commit(r1, r1.full_tokens, 0.0)
+    h = chain_hash(0, (0, 1, 2, 3))
+    rc_map[h] = 2
+    bm.free_request(r1, 1.0, finished=True)
+    r2 = _req((9, 9, 9, 9))
+    bm.allocate(r2, 4, r2.full_tokens, 2.0)
+    assert bm.metrics.punished_tokens == 4   # evicted block was needed (rc=2)
+
+
+# ---------------------------------------------------------------- property
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3),            # doc id
+                          st.integers(1, 30),           # prompt len
+                          st.booleans()),               # online?
+                min_size=1, max_size=12),
+       st.integers(2, 5))
+def test_block_manager_invariants(reqs_spec, bs):
+    """No double allocation; ref counts consistent; free+used+cached == total."""
+    bm = BlockManager(24, bs)
+    live = []
+    now = 0.0
+    for doc, plen, online in reqs_spec:
+        now += 1.0
+        prompt = tuple([doc] * bs + list(range(100 + doc, 100 + doc + plen)))
+        r = _req(prompt, TaskType.ONLINE if online else TaskType.OFFLINE)
+        res = bm.allocate(r, len(prompt), r.full_tokens, now)
+        if res is None:
+            continue
+        r.computed_tokens = len(prompt)
+        bm.commit(r, r.full_tokens, now)
+        live.append(r)
+        # invariant: a block id referenced by two requests must be a shared
+        # (hashed) block; unhashed blocks belong to exactly one request
+        owners = {}
+        for lr in live:
+            for bid in lr.block_ids:
+                owners.setdefault(bid, []).append(lr.rid)
+        for bid, rids in owners.items():
+            blk = bm.blocks[bid]
+            assert blk.ref == len(rids)
+            if len(rids) > 1:
+                assert blk.hash is not None
+        # invariant: used + free + evictable == total
+        used = sum(1 for b in bm.blocks if b.ref > 0)
+        assert used + bm.free_blocks + bm.evictable_count() == bm.num_blocks
+        # occasionally finish one
+        if len(live) > 3:
+            done = live.pop(0)
+            bm.free_request(done, now, finished=True)

@@ -1,0 +1,65 @@
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+
+EXPECTED = {
+    "qwen2-vl-72b": dict(num_layers=80, d_model=8192, num_heads=64,
+                         num_kv_heads=8, d_ff=29568, vocab_size=152064),
+    "llama4-scout-17b-a16e": dict(num_layers=48, d_model=5120, num_heads=40,
+                                  num_kv_heads=8, d_ff=8192,
+                                  vocab_size=202048, num_experts=16, top_k=1),
+    "qwen3-4b": dict(num_layers=36, d_model=2560, num_heads=32,
+                     num_kv_heads=8, d_ff=9728, vocab_size=151936,
+                     qk_norm=True),
+    "qwen3-moe-30b-a3b": dict(num_layers=48, d_model=2048, num_heads=32,
+                              num_kv_heads=4, d_ff=768, vocab_size=151936,
+                              num_experts=128, top_k=8),
+    "mamba2-1.3b": dict(num_layers=48, d_model=2048, vocab_size=50280,
+                        ssm_state=128),
+    "yi-9b": dict(num_layers=48, d_model=4096, num_heads=32, num_kv_heads=4,
+                  d_ff=11008, vocab_size=64000),
+    "musicgen-medium": dict(num_layers=48, d_model=1536, num_heads=24,
+                            num_kv_heads=24, d_ff=6144, vocab_size=2048),
+    "granite-34b": dict(num_layers=88, d_model=6144, num_heads=48,
+                        num_kv_heads=1, d_ff=24576, vocab_size=49152),
+    "codeqwen1.5-7b": dict(num_layers=32, d_model=4096, num_heads=32,
+                           num_kv_heads=32, d_ff=13440, vocab_size=92416),
+    "recurrentgemma-9b": dict(num_layers=38, d_model=4096, num_heads=16,
+                              num_kv_heads=1, d_ff=12288, vocab_size=256000),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assigned_dims(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k)
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_invariants(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers == 2
+    assert r.d_model <= 512
+    assert r.num_experts <= 4
+    assert r.dtype == "float32"
+
+
+def test_param_counts_plausible():
+    # within 35% of the named sizes (arch-level approximations allowed)
+    approx = {"qwen2-vl-72b": 72e9, "qwen3-4b": 4e9, "mamba2-1.3b": 1.3e9,
+              "yi-9b": 8.8e9, "codeqwen1.5-7b": 7.2e9,
+              "qwen3-moe-30b-a3b": 30e9}
+    for arch, n in approx.items():
+        got = get_config(arch).param_count
+        assert 0.65 * n < got < 1.45 * n, (arch, got)

@@ -1,0 +1,93 @@
+"""Estimator toolkits: Eq.6-8 fit recovery, memory + rate predictors."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimator import MemoryPredictor, RatePredictor, TimeModel
+
+
+def test_prefill_fit_recovers_coefficients():
+    true = TimeModel(alpha=3e-8, beta=2e-6, c=1e-4)
+    ls = [64, 128, 256, 512, 1024, 2048, 4096]
+    samples = [(l, true.prefill_time([(0, l)])) for l in ls]
+    tm = TimeModel()
+    tm.fit_prefill(samples)
+    for l in (100, 1000, 3000):
+        want = true.prefill_time([(0, l)])
+        got = tm.prefill_time([(0, l)])
+        assert abs(want - got) / want < 0.1, (l, want, got)
+
+
+def test_decode_fit_recovers():
+    true = TimeModel(gamma=2e-7, delta=5e-7, d0=1e-6)
+    samples = []
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        lens = rng.integers(10, 2000, rng.integers(1, 16))
+        samples.append((int(lens.max()), float(lens.mean()),
+                        true.decode_time(lens)))
+    tm = TimeModel()
+    tm.fit_decode(samples)
+    assert abs(tm.gamma - true.gamma) / true.gamma < 0.15
+    assert abs(tm.delta - true.delta) / true.delta < 0.15
+
+
+def test_lambda_fit():
+    true = TimeModel(lam=0.7)
+    samples = []
+    rng = np.random.default_rng(1)
+    for _ in range(30):
+        tp, td = rng.uniform(0.01, 0.1, 2)
+        samples.append((tp, td, true.lam * max(tp, td) + (1 - true.lam) * min(tp, td)))
+    tm = TimeModel()
+    tm.fit_lambda(samples)
+    assert abs(tm.lam - 0.7) < 0.05
+
+
+def test_chunked_prefill_spans_consistent():
+    """Chunked spans sum to the full-prefill quadratic cost (minus floors)."""
+    tm = TimeModel(alpha=1e-7, beta=1e-5, c=0.0)
+    full = tm.prefill_time([(0, 1024)])
+    chunks = tm.prefill_time([(0, 256), (256, 512), (512, 768), (768, 1024)])
+    assert abs(full - chunks) < 1e-9
+
+
+def test_memory_predictor_mu_sigma():
+    mp = MemoryPredictor(window=100.0, k_sigma=2.0)
+    rng = np.random.default_rng(2)
+    vals = rng.normal(1000, 100, 200)
+    for i, v in enumerate(vals):
+        mp.observe(i * 0.5, v)
+    pred = mp.predict()
+    assert 1100 < pred < 1350                 # mu + 2 sigma
+    thr = mp.threshold_blocks(total_blocks=256, block_size=16)
+    assert 256 - int(np.ceil(pred / 16)) == thr or thr == int(256 * 0.3)
+
+
+def test_rate_predictor_tracks_rate():
+    rp = RatePredictor(window=60.0)
+    t = 0.0
+    rng = np.random.default_rng(3)
+    while t < 120:
+        t += rng.exponential(1 / 5.0)         # 5 arrivals / s
+        rp.observe(t)
+    pred = rp.predict_rate(120.0)
+    assert 4.0 < pred < 8.0                   # >= mean, includes +sigma
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=8),
+       st.lists(st.integers(1, 4096), min_size=0, max_size=8))
+def test_batch_time_bounds(prefill_lens, decode_lens):
+    """Eq.8: max(Tp,Td) <= T_batch <= Tp+Td when lam in [0,1]."""
+    tm = TimeModel(alpha=1e-8, beta=1e-6, c=1e-5, gamma=1e-7, delta=1e-7,
+                   d0=1e-5, lam=0.8)
+    spans = [(0, l) for l in prefill_lens]
+    tp = tm.prefill_time(spans)
+    td = tm.decode_time(decode_lens) if decode_lens else 0.0
+    t = tm.batch_time(spans, decode_lens)
+    if td == 0.0:
+        assert abs(t - tp) < 1e-12
+    else:
+        # Eq.8 with lam in [0, 1.5]: overlap can dip below max but the
+        # batch never costs less than either floor's min, nor more than sum
+        assert min(tp, td) - 1e-12 <= t <= tp + td + 1e-12

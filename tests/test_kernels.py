@@ -1,0 +1,106 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.chunked_prefill import chunked_prefill_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,hd,bs,nblk", [
+    (2, 4, 2, 32, 8, 4),
+    (3, 8, 1, 64, 16, 3),     # MQA
+    (1, 6, 6, 16, 8, 2),      # MHA
+])
+def test_paged_attention_sweep(dtype, b, hq, hkv, hd, bs, nblk):
+    rng = jax.random.PRNGKey(b * 31 + hq)
+    ks = jax.random.split(rng, 4)
+    p = nblk * b + 2
+    q = jax.random.normal(ks[0], (b, hq, hd), dtype)
+    kp = jax.random.normal(ks[1], (p, bs, hkv, hd), dtype)
+    vp = jax.random.normal(ks[2], (p, bs, hkv, hd), dtype)
+    bt = jax.random.randint(ks[3], (b, nblk), 0, p)
+    cl = jnp.asarray(np.random.default_rng(0).integers(1, nblk * bs, b), jnp.int32)
+    out = paged_attention(q, kp, vp, bt, cl, interpret=True)
+    want = ref.ref_paged_attention(q, kp, vp, bt, cl)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sc,t,hq,hkv,hd,ctx", [
+    (64, 128, 4, 2, 32, 0),
+    (64, 128, 4, 2, 32, 37),
+    (32, 64, 2, 1, 64, 30),
+])
+def test_chunked_prefill_sweep(dtype, sc, t, hq, hkv, hd, ctx):
+    rng = jax.random.PRNGKey(sc + ctx)
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (sc, hq, hd), dtype)
+    k = jax.random.normal(ks[1], (t, hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (t, hkv, hd), dtype)
+    out = chunked_prefill_attention(q, k, v, ctx, blk_q=32, blk_k=32,
+                                    interpret=True)
+    want = ref.ref_chunked_prefill_attention(q, k, v, ctx)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 64, 2, 8, 4, 16),
+    (1, 128, 4, 16, 8, 32),
+    (3, 32, 1, 4, 16, 16),
+])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk):
+    rng = jax.random.PRNGKey(s + h)
+    ks = jax.random.split(rng, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dta = -jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    bm = jax.random.normal(ks[2], (b, s, n))
+    cm = jax.random.normal(ks[3], (b, s, n))
+    y, fs = ssd_scan(x, dta, bm, cm, chunk=chunk, interpret=True)
+    y_ref, fs_ref = ref.ref_ssd_sequential(x, dta, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(fs_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_attention_ignores_garbage_pages():
+    """Pages not referenced by the block table must not affect output."""
+    rng = jax.random.PRNGKey(9)
+    ks = jax.random.split(rng, 4)
+    b, hq, hkv, hd, bs, nblk, p = 1, 2, 1, 16, 8, 2, 6
+    q = jax.random.normal(ks[0], (b, hq, hd))
+    kp = jax.random.normal(ks[1], (p, bs, hkv, hd))
+    vp = jax.random.normal(ks[2], (p, bs, hkv, hd))
+    bt = jnp.array([[1, 3]], jnp.int32)
+    cl = jnp.array([12], jnp.int32)
+    out1 = paged_attention(q, kp, vp, bt, cl, interpret=True)
+    kp2 = kp.at[0].set(999.0).at[2].set(-999.0)
+    vp2 = vp.at[4].set(123.0)
+    out2 = paged_attention(q, kp2, vp2, bt, cl, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("b,s,w,chunk,blk_w", [
+    (2, 64, 32, 16, 32),
+    (1, 128, 64, 32, 32),
+    (3, 32, 16, 16, 16),
+])
+def test_rglru_scan_sweep(b, s, w, chunk, blk_w):
+    from repro.kernels.rglru_scan import rglru_scan
+    rng = jax.random.PRNGKey(s + w)
+    ks = jax.random.split(rng, 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, w)))
+    bb = jax.random.normal(ks[1], (b, s, w))
+    got = rglru_scan(a, bb, chunk=chunk, blk_w=blk_w, interpret=True)
+    want = ref.ref_rglru_scan(a, bb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,73 @@
+"""Offline pool: rc accounting + candidate structure."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.block_manager import chain_hash
+from repro.core.radix_pool import OfflinePool
+from repro.core.request import Request, TaskType
+
+
+def _off(prompt, t=0.0):
+    return Request(prompt=tuple(prompt), max_new_tokens=4,
+                   task_type=TaskType.OFFLINE, arrival_time=t)
+
+
+def test_rc_counts_sharers():
+    pool = OfflinePool(block_size=4)
+    doc = (1, 2, 3, 4, 5, 6, 7, 8)
+    r1 = _off(doc + (10, 11, 12, 13))
+    r2 = _off(doc + (20, 21, 22, 23))
+    r3 = _off((9, 9, 9, 9, 1, 2, 3, 4))
+    for r in (r1, r2, r3):
+        pool.add(r)
+    h1 = chain_hash(0, doc[:4])
+    h2 = chain_hash(h1, doc[4:8])
+    assert pool.rc(h1) == 2
+    assert pool.rc(h2) == 2
+    pool.remove(r1)
+    assert pool.rc(h1) == 1
+    pool.remove(r2)
+    assert pool.rc(h1) == 0
+
+
+def test_candidates_one_per_group():
+    pool = OfflinePool(block_size=4)
+    doc_a, doc_b = (1,) * 4, (2,) * 4
+    reqs = [_off(doc_a + (i,) * 4, t=i) for i in range(3)]
+    reqs += [_off(doc_b + (i,) * 4, t=10 + i) for i in range(3)]
+    for r in reqs:
+        pool.add(r)
+    cands = list(pool.candidates())
+    groups = {r.prompt[:4] for r in cands}
+    assert groups == {doc_a, doc_b}
+
+
+def test_fcfs_head_earliest():
+    pool = OfflinePool(block_size=4)
+    r_late = _off((1,) * 8, t=5.0)
+    r_early = _off((2,) * 8, t=1.0)
+    pool.add(r_late)
+    pool.add(r_early)
+    assert pool.fcfs_head() is r_early
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 40)),
+                min_size=1, max_size=20))
+def test_pool_add_remove_roundtrip(spec):
+    """rc is exactly the number of pooled requests passing each chunk."""
+    pool = OfflinePool(block_size=4)
+    reqs = []
+    for doc, salt in spec:
+        prompt = tuple([doc] * 8 + [salt] * 4)
+        r = _off(prompt)
+        pool.add(r)
+        reqs.append(r)
+    # ground-truth rc for each doc's first chunk
+    from collections import Counter
+    first = Counter(r.prompt[:4] for r in reqs)
+    for chunk, n in first.items():
+        assert pool.rc(chain_hash(0, chunk)) == n
+    for r in reqs:
+        pool.remove(r)
+    assert len(pool) == 0
+    assert pool.hash_count == {}

@@ -1,0 +1,142 @@
+"""Scheduler behaviour (§4.1): FCFS online, preemption, SLO shedding,
+KV-aware offline selection."""
+import pytest
+
+from repro.core.block_manager import BlockManager
+from repro.core.estimator import TimeModel
+from repro.core.policies import BS, ECHO, PolicyConfig
+from repro.core.radix_pool import OfflinePool
+from repro.core.request import SLO, Request, RequestState, TaskType
+from repro.core.scheduler import Scheduler
+
+
+def _sched(policy=ECHO, num_blocks=64, bs=4, chunk=8, tm=None, **kw):
+    pool = OfflinePool(bs)
+    bm = BlockManager(num_blocks, bs, task_aware=policy.task_aware_kv,
+                      rc_provider=pool.rc)
+    tm = tm or TimeModel(alpha=0, beta=1e-3, c=1e-4, gamma=1e-4, delta=1e-4,
+                         d0=1e-4, lam=1.0)
+    return Scheduler(bm, pool, tm, policy, chunk_size=chunk, **kw)
+
+
+def _online(plen, t=0.0, slo=SLO(1.0, 0.1), max_new=4):
+    return Request(prompt=tuple(range(plen)), max_new_tokens=max_new,
+                   task_type=TaskType.ONLINE, arrival_time=t, slo=slo)
+
+
+def _offline(prompt, t=0.0, max_new=4):
+    return Request(prompt=tuple(prompt), max_new_tokens=max_new,
+                   task_type=TaskType.OFFLINE, arrival_time=t)
+
+
+def test_online_admitted_fcfs():
+    s = _sched()
+    r1, r2 = _online(8, 0.0), _online(8, 0.1)
+    s.submit(r2)
+    s.submit(r1)   # submitted out of order but queue preserves submit order
+    plan = s.schedule(0.2)
+    reqs = [r for r, _ in plan.prefills]
+    assert reqs == [r2, r1]      # FCFS on queue order
+
+
+def test_offline_only_after_online_drained():
+    s = _sched(max_running=1)
+    s.submit(_online(8))
+    s.submit(_offline(range(100, 116)))
+    plan = s.schedule(0.0)
+    # max_running=1: the online request fills the slot; online queue empty,
+    # but no offline slot left
+    assert all(r.task_type == TaskType.ONLINE for r, _ in plan.prefills)
+
+
+def test_online_preempts_offline_on_memory_pressure():
+    s = _sched(num_blocks=8, chunk=32)
+    off = _offline(range(100, 124))            # 24 tokens -> 6 blocks
+    s.submit(off)
+    plan = s.schedule(0.0)
+    assert any(r is off for r, _ in plan.prefills)
+    assert len(off.block_ids) == 6             # 2 blocks free
+    on = _online(24, t=1.0)                    # needs 6 blocks: must preempt
+    s.submit(on)
+    plan = s.schedule(1.0)
+    assert off in plan.preempted
+    assert off.state == RequestState.WAITING
+    assert any(r is on for r, _ in plan.prefills)
+    assert len(s.pool) == 1                    # offline back in pool
+
+
+def test_slo_sheds_offline_work():
+    # estimator on; make decode so slow the offline prefill would violate SLO
+    tm = TimeModel(alpha=0, beta=1.0, c=0.5, gamma=1e-4, delta=1e-4,
+                   d0=1e-4, lam=1.0)           # prefill ~1s/token!
+    s = _sched(policy=ECHO, tm=tm)
+    on = _online(4, slo=SLO(ttft=1.0, tpot=0.05))
+    s.submit(on)
+    plan = s.schedule(0.0)                     # online prefill admitted
+    for r, c in plan.prefills:
+        r.computed_tokens += c
+    on.record_token(1, 0.5)
+    s.submit(_offline(range(100, 132)))
+    plan = s.schedule(0.5)
+    # the offline prefill would add ~8s >> tpot budget: must be shed
+    assert all(r.task_type == TaskType.ONLINE for r, _ in plan.prefills)
+    assert on in plan.decodes
+
+
+def test_kv_aware_prefers_cached_candidate():
+    s = _sched(policy=ECHO, num_blocks=64, chunk=8)
+    doc = tuple(range(16))
+    leader = _offline(doc + (100, 101, 102, 103), t=0.0)
+    stranger = _offline(tuple(range(200, 220)), t=0.0)
+    s.submit(leader)
+    s.submit(stranger)
+    # leader admitted + fully prefilled + committed
+    plan = s.schedule(0.0)
+    assert any(r is leader or r is stranger for r, _ in plan.prefills)
+    admitted = plan.prefills[0][0]
+    while not admitted.prefill_done:
+        for r, c in list(plan.prefills):
+            r.computed_tokens += c
+            s.bm.commit(r, r.full_tokens, 0.0)
+        plan = s.schedule(1.0)
+    # now submit a follower sharing the doc: must be chosen over FCFS order
+    follower = _offline(doc + (300, 301, 302, 303), t=5.0)
+    earlier_stranger = _offline(tuple(range(400, 420)), t=4.0)
+    s.submit(earlier_stranger)
+    s.submit(follower)
+    for _ in range(8):
+        plan = s.schedule(2.0)
+        newly = [r for r, _ in plan.prefills if r in (follower, earlier_stranger)]
+        if newly:
+            break
+        for r, c in list(plan.prefills):
+            r.computed_tokens += c
+            s.bm.commit(r, r.full_tokens, 2.0)
+    assert newly and newly[0] is follower, \
+        "KV-aware scheduler must pick the prefix-sharing candidate first"
+
+
+def test_fcfs_policy_ignores_cache_affinity():
+    s = _sched(policy=BS, num_blocks=64, chunk=8)
+    a = _offline(tuple(range(16)), t=0.0)
+    b = _offline(tuple(range(50, 66)), t=1.0)
+    s.submit(b)
+    s.submit(a)
+    plan = s.schedule(0.0)
+    first = [r for r, _ in plan.prefills]
+    assert first and first[0] is a            # earliest arrival
+
+
+def test_benefit_counts_cached_progress():
+    s = _sched(policy=ECHO)
+    doc = tuple(range(16))
+    leader = _offline(doc + (1, 2, 3, 4))
+    s.submit(leader)
+    plan = s.schedule(0.0)
+    for r, c in plan.prefills:
+        r.computed_tokens += c
+        s.bm.commit(r, r.full_tokens, 0.0)
+    follower = _offline(doc + (7, 8, 9, 10))
+    cand = s._evaluate_candidate(follower, plan)
+    assert cand.cached >= 8
+    assert cand.d_benefit >= cand.cached

@@ -1,0 +1,58 @@
+"""Hypothesis property tests on scheduler/system invariants."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ECHO, SLO, EchoEngine, Request, TaskType, TimeModel
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.booleans(),            # online?
+                          st.integers(4, 60),       # prompt len
+                          st.integers(1, 6),        # max_new
+                          st.floats(0, 2.0)),       # arrival
+                min_size=1, max_size=16),
+       st.integers(16, 64),                         # num_blocks
+       st.sampled_from([8, 16]))                    # block size
+def test_engine_invariants(spec, num_blocks, bs):
+    """Across arbitrary workloads: memory is never oversubscribed, decodes
+    only run after prefill completes, online queue drains FCFS, and every
+    token is attributed to exactly one request."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    tm = TimeModel(alpha=1e-7, beta=1e-4, c=1e-3, gamma=1e-5, delta=1e-5,
+                   d0=1e-3, lam=0.9)
+    eng = EchoEngine(None, None, ECHO, num_blocks=num_blocks, block_size=bs,
+                     chunk_size=2 * bs, time_model=tm)
+    reqs = []
+    for online, plen, mn, t in spec:
+        prompt = tuple(int(x) for x in rng.integers(0, 64, plen))
+        reqs.append(Request(prompt=prompt, max_new_tokens=mn,
+                            task_type=TaskType.ONLINE if online
+                            else TaskType.OFFLINE,
+                            arrival_time=float(t),
+                            slo=SLO(5.0, 1.0) if online else None))
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(400):
+        before_queue = list(eng.scheduler.online_queue)
+        rec = eng.step()
+        # invariant: block accounting is conserved and never oversubscribed
+        used = sum(1 for b in eng.bm.blocks if b.ref > 0)
+        assert used + eng.bm.free_blocks + eng.bm.evictable_count() \
+            == eng.bm.num_blocks
+        # invariant: decodes have completed prefill
+        for req in eng.scheduler.running:
+            if req.state.value == "running" and req.prefill_done:
+                assert req.computed_tokens >= req.prefill_target_len
+        # invariant: FCFS — queue only ever pops from the left
+        after_queue = list(eng.scheduler.online_queue)
+        if after_queue and before_queue:
+            tail = [r for r in before_queue if r in after_queue]
+            assert tail == after_queue[-len(tail):] if tail else True
+        if not eng.pending and not eng.scheduler.running \
+                and not eng.scheduler.online_queue and len(eng.pool) == 0:
+            break
+    done = [r for r in eng.stats.finished]
+    for r in done:
+        assert len(r.output_tokens) == r.max_new_tokens
+    # no request counted twice
+    assert len({r.rid for r in done}) == len(done)

@@ -1,0 +1,60 @@
+"""Divisibility-aware sharding rules (no multi-device runtime needed:
+_axes_fit/_leaf_spec only consult mesh.shape)."""
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.sharding import _axes_fit, _leaf_spec
+
+MESH = SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16})
+
+
+def _leaf(shape):
+    return SimpleNamespace(shape=shape, ndim=len(shape))
+
+
+def test_axes_fit_divisibility():
+    assert _axes_fit(64, ("model",), MESH) == ("model",)
+    assert _axes_fit(40, ("model",), MESH) is None          # llama4 heads
+    assert _axes_fit(24, ("model",), MESH) is None          # musicgen heads
+    assert _axes_fit(1, ("model",), MESH) is None           # MQA kv
+    # batch over (pod, data): largest prefix product dividing the dim
+    assert _axes_fit(256, ("pod", "data"), MESH) == ("pod", "data")
+    assert _axes_fit(32, ("pod", "data"), MESH) == ("pod", "data")
+    assert _axes_fit(16, ("pod", "data"), MESH) == ("pod",)  # 16 % 32 != 0
+    assert _axes_fit(1, ("pod", "data"), MESH) is None
+
+
+def test_param_rules_head_divisibility():
+    # qwen3-4b wq (d, 32, 128): heads shard
+    spec = _leaf_spec(["layers", "attn", "wq"], _leaf((36, 2560, 32, 128)), MESH)
+    assert spec[2] in ("model", ("model",))
+    # llama4 wq (d, 40, 128): heads replicate
+    spec = _leaf_spec(["wq"], _leaf((5120, 40, 128)), MESH)
+    assert spec == jax.sharding.PartitionSpec(None, None, None)
+    # granite wk kv=1: replicate
+    spec = _leaf_spec(["wk"], _leaf((6144, 1, 128)), MESH)
+    assert spec[1] is None
+
+
+def test_param_rules_experts_and_ffn():
+    spec = _leaf_spec(["we1"], _leaf((128, 2048, 768)), MESH)
+    assert spec[0] in ("model", ("model",))
+    spec = _leaf_spec(["w2"], _leaf((48, 13440, 4096)), MESH)
+    assert spec == jax.sharding.PartitionSpec(None, ("model",), None)
+
+
+def test_zero1_extra_axes():
+    # optimizer moments also shard across data: (d, ff) ff = 9728
+    spec = _leaf_spec(["w1"], _leaf((2560, 9728)), MESH, extra_axes=("data",))
+    assert spec[1] == ("model", "data")                      # 9728 % 256 == 0
+    # codeqwen ff=13440: 13440 % 256 != 0 -> model only (graceful)
+    spec = _leaf_spec(["w1"], _leaf((4096, 13440)), MESH, extra_axes=("data",))
+    assert spec[1] in ("model", ("model",))
+
+
+def test_unknown_param_replicated():
+    spec = _leaf_spec(["A_log"], _leaf((64,)), MESH)
+    assert spec == jax.sharding.PartitionSpec(None)

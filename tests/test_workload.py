@@ -1,0 +1,53 @@
+"""Workload + trace generators mirror the paper's characteristics."""
+import numpy as np
+
+from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
+from repro.data.workload import sharing_rate
+from repro.core.simulator import estimate_capacity, simulate
+from repro.core import ECHO, SLO, TimeModel
+
+
+def test_offline_sharing_rate_high():
+    offline = make_offline_corpus(6, 8, doc_len=256, question_len=32)
+    rate = sharing_rate(offline, block_size=16)
+    assert rate > 0.8, rate                 # Table 1: LooGLE ~91%
+
+
+def test_online_sharing_rate_low():
+    online = make_online_requests(np.arange(40) * 0.1, prompt_mean=300,
+                                  prompt_std=80)
+    rate = sharing_rate(online, block_size=16)
+    assert rate < 0.05, rate                # Table 1: ShareGPT < 5%
+
+
+def test_trace_tidal_ratio():
+    tr = BurstyTrace(base_rate=2.0, tidal_period=1000.0, tidal_ratio=6.0)
+    peak = tr.rate(500.0)                   # sin peak at T/2
+    trough = tr.rate(0.0)                   # trough at 0
+    assert peak / trough > 4.0
+
+
+def test_trace_sampling_rate_plausible():
+    tr = BurstyTrace(base_rate=5.0, tidal_period=1e9, burst_rate=1.0, seed=1)
+    arr = tr.sample(0, 200)
+    got = len(arr) / 200
+    want = np.mean([tr.rate(t) for t in np.linspace(0, 200, 50)])
+    assert 0.6 * want < got < 1.6 * want
+
+
+def test_capacity_estimation_monotone():
+    """§5.4 Step 1: more blocks -> SLO attainment never decreases much;
+    the report picks the smallest passing size."""
+    tm = TimeModel(alpha=2e-7, beta=1e-4, c=2e-3, gamma=3e-5, delta=3e-5,
+                   d0=2e-3, lam=0.9)
+    online = make_online_requests(np.arange(0, 10, 0.25),
+                                  prompt_mean=96, prompt_std=16,
+                                  max_new_mean=16, slo=SLO(1.0, 0.1))
+    offline = make_offline_corpus(2, 4, doc_len=64, question_len=16, max_new=8)
+    rep = estimate_capacity(online, offline, tm,
+                            candidate_blocks=(16, 64, 256),
+                            slo_target=0.9, duration=20.0)
+    assert rep.min_blocks_for_slo is not None
+    atts = [a for _, a in rep.slo_by_blocks]
+    assert atts[-1] >= atts[0] - 0.05
+    assert rep.offline_throughput is None or rep.offline_throughput >= 0
