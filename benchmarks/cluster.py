@@ -1,0 +1,103 @@
+"""Cluster co-serving benchmark: fleet offline throughput + online SLO
+attainment vs. replica count and vs. router policy.
+
+Scenario: a multi-tenant mix (distinct SLO classes, private shared-prefix
+corpora per tenant) whose *fleet-wide* offline prefix working set exceeds a
+single replica's KV cache, while each tenant's subset fits. A
+prefix-affinity router keeps each document group on one home replica (every
+prefix computed once fleet-wide); round-robin/random scatter recomputes
+each document on every replica and thrashes each replica's cache.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.scenario import time_model
+from repro.cluster import ClusterSimulator, FleetPlanner
+from repro.core import ECHO
+from repro.core.simulator import clone_requests
+from repro.data import default_tenants, make_multi_tenant_workload
+
+DURATION = 30.0
+NUM_BLOCKS = 128          # per replica; fleet working set >> one cache
+REPLICA_SWEEP = (1, 2, 4)
+POLICY_SWEEP = ("affinity", "round_robin", "random")
+POLICY_REPLICAS = 3
+
+
+def _workload():
+    return make_multi_tenant_workload(default_tenants(3), DURATION, seed=5)
+
+
+def _peak_workload():
+    """§5.4 step 1 uses a short *peak* window: same tenants at flash-crowd
+    rates, so the planner has to scale the fleet out."""
+    import dataclasses
+    peak = tuple(dataclasses.replace(t, online_rate=t.online_rate * 12)
+                 for t in default_tenants(3))
+    return make_multi_tenant_workload(peak, DURATION / 2, seed=6)
+
+
+def _run(n_replicas, router_policy, online, offline, tm):
+    sim = ClusterSimulator(n_replicas, ECHO, router_policy=router_policy,
+                           num_blocks=NUM_BLOCKS, time_model=tm, seed=0)
+    sim.submit_all(clone_requests(online) + clone_requests(offline))
+    return sim.run(until_time=DURATION * 4)
+
+
+def rows():
+    tm = time_model()
+    online, offline = _workload()
+    out = []
+
+    # fleet scaling: throughput + SLO vs. replica count (affinity router)
+    for n in REPLICA_SWEEP:
+        t0 = time.perf_counter()
+        stats = _run(n, "affinity", online, offline, tm)
+        wall = (time.perf_counter() - t0) * 1e6
+        att = min(stats.slo_attainment("ttft"), stats.slo_attainment("tpot"))
+        out.append((f"cluster.scale.{n}rep.offline_tput", wall,
+                    f"{stats.offline_throughput():.1f}tok/s"))
+        out.append((f"cluster.scale.{n}rep.slo", 0.0, f"{att:.3f}"))
+
+    # router ablation at fixed fleet size
+    by_policy = {}
+    for pol in POLICY_SWEEP:
+        stats = _run(POLICY_REPLICAS, pol, online, offline, tm)
+        att = min(stats.slo_attainment("ttft"), stats.slo_attainment("tpot"))
+        tput = stats.offline_throughput()
+        by_policy[pol] = (tput, att)
+        out.append((f"cluster.router.{pol}.offline_tput", 0.0,
+                    f"{tput:.1f}tok/s"))
+        out.append((f"cluster.router.{pol}.slo", 0.0, f"{att:.3f}"))
+        out.append((f"cluster.router.{pol}.affinity_hits", 0.0,
+                    str(stats.router.affinity_hits)))
+        out.append((f"cluster.router.{pol}.stolen", 0.0,
+                    str(stats.router.stolen_requests)))
+    # headline: affinity over round-robin (acceptance: speedup > 1 at
+    # equal-or-better SLO)
+    aff, rr = by_policy["affinity"], by_policy["round_robin"]
+    out.append(("cluster.affinity_vs_rr.speedup", 0.0,
+                f"{aff[0] / max(rr[0], 1e-9):.3f}x"))
+    out.append(("cluster.affinity_vs_rr.slo_delta", 0.0,
+                f"{aff[1] - rr[1]:+.3f}"))
+
+    # fleet planning: min replicas x blocks for the SLO target on a peak
+    # online window, co-served with the offline corpus
+    planner = FleetPlanner(tm)
+    peak_online, peak_offline = _peak_workload()
+    t0 = time.perf_counter()
+    rep = planner.plan(peak_online, peak_offline,
+                       candidate_replicas=REPLICA_SWEEP,
+                       candidate_blocks=(64, NUM_BLOCKS), slo_target=0.9,
+                       duration=DURATION)
+    wall = (time.perf_counter() - t0) * 1e6
+    out.append(("cluster.plan.min_replicas", wall, str(rep.min_replicas)))
+    out.append(("cluster.plan.blocks_per_replica", 0.0,
+                str(rep.blocks_per_replica)))
+    if rep.offline_throughput is not None:
+        out.append(("cluster.plan.offline_tput", 0.0,
+                    f"{rep.offline_throughput:.1f}tok/s"))
+    for n, nb, att in rep.slo_by_config:
+        out.append((f"cluster.plan.slo_{n}rep_{nb}blocks", 0.0, f"{att:.3f}"))
+    return out

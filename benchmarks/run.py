@@ -26,8 +26,8 @@ def _section(name, fn, rows_out):
 
 
 def main() -> None:
-    from benchmarks import ablations, capacity, estimator_accuracy, figures
-    from benchmarks import kernels_micro, roofline
+    from benchmarks import ablations, capacity, cluster, estimator_accuracy
+    from benchmarks import figures, kernels_micro, roofline
 
     rows = []
     _section("fig6", figures.fig6_throughput_speedup, rows)
@@ -38,6 +38,7 @@ def main() -> None:
     _section("fig11", figures.fig11_trace_prediction, rows)
     _section("estimator", estimator_accuracy.rows, rows)
     _section("capacity", capacity.rows, rows)
+    _section("cluster", cluster.rows, rows)
     _section("kernels", kernels_micro.rows, rows)
     _section("ablations", ablations.rows, rows)
     _section("roofline", roofline.rows, rows)

@@ -7,11 +7,6 @@ from __future__ import annotations
 from repro.core import SLO, EchoEngine, PolicyConfig, TimeModel
 from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
 
-# Coefficients of LLaMA-3.1-8B-instruct magnitude on one A100-40G,
-# structured per Eq.6-8 (micro-benchmark-shaped; see estimator_accuracy).
-A100_TM = dict(alpha=2e-7, beta=1e-4, c=2e-3, gamma=3e-5, delta=3e-5,
-               d0=2e-3, lam=0.9)
-
 # LooGLE-like regime (§7.1): the offline prefix working set (10 docs x 20
 # blocks = 200) fits the 256-block cache, but online bursts flush it under
 # LRU — the setting of Fig. 9 where the task-aware manager pays off.
@@ -25,9 +20,9 @@ DEFAULTS = dict(
 
 
 def time_model(**kw) -> TimeModel:
-    d = dict(A100_TM)
-    d.update(kw)
-    return TimeModel(**d)
+    """A100-magnitude Eq.6-8 coefficients (micro-benchmark-shaped; see
+    estimator_accuracy)."""
+    return TimeModel.a100(**kw)
 
 
 def build_engine(policy: PolicyConfig, seed: int = 0, tm_kw=None, **overrides):

@@ -1,0 +1,13 @@
+"""Cluster-scale co-serving: multi-replica router, prefix-affinity offline
+dispatch with work stealing, shared-virtual-clock fleet simulation, and
+fleet capacity planning (§5.4 extended to N replicas)."""
+from repro.cluster.planner import FleetPlanner, FleetReport
+from repro.cluster.replica import Replica, ReplicaLoad, first_block_hash
+from repro.cluster.router import ROUTER_POLICIES, Router, RouterStats
+from repro.cluster.simulator import ClusterSimulator, ClusterStats
+
+__all__ = [
+    "ClusterSimulator", "ClusterStats", "FleetPlanner", "FleetReport",
+    "ROUTER_POLICIES", "Replica", "ReplicaLoad", "Router", "RouterStats",
+    "first_block_hash",
+]

@@ -1,0 +1,111 @@
+"""FleetPlanner: §5.4 capacity estimation lifted to a replicated fleet.
+
+The single-GPU planner answers "min KV blocks for the SLO"; the fleet
+planner answers "min replicas × blocks for a target online SLO *and* a
+target offline throughput", replaying the peak window through the full
+cluster (router + work stealing + per-replica scheduler/KV manager) on the
+virtual clock. The search walks replica counts smallest→largest and, per
+count, block budgets smallest→largest — the first configuration meeting
+both targets is the recommended fleet.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from repro.cluster.simulator import ClusterSimulator, ClusterStats
+from repro.core.estimator import TimeModel
+from repro.core.policies import ECHO, PolicyConfig
+from repro.core.request import Request
+from repro.core.simulator import clone_requests
+
+
+@dataclass
+class FleetReport:
+    min_replicas: Optional[int]
+    blocks_per_replica: Optional[int]
+    # every probed (replicas, blocks) -> min(TTFT, TPOT) attainment
+    slo_by_config: List[Tuple[int, int, float]] = field(default_factory=list)
+    # offline throughput of SLO-feasible configs: (replicas, blocks, tok/s)
+    throughput_by_config: List[Tuple[int, int, float]] = field(default_factory=list)
+    offline_throughput: Optional[float] = None
+
+
+class FleetPlanner:
+    def __init__(self, time_model: TimeModel, *,
+                 policy: PolicyConfig = ECHO,
+                 router_policy: str = "affinity",
+                 block_size: int = 16, chunk_size: int = 64,
+                 max_running: int = 64, seed: int = 0):
+        self.tm = time_model
+        self.policy = policy
+        self.router_policy = router_policy
+        self.block_size = block_size
+        self.chunk_size = chunk_size
+        self.max_running = max_running
+        self.seed = seed
+
+    # ------------------------------------------------------------- probes
+    def simulate(self, online: Sequence[Request], offline: Sequence[Request],
+                 n_replicas: int, num_blocks: int, *,
+                 duration: Optional[float] = None,
+                 max_iters: int = 200_000) -> ClusterStats:
+        sim = ClusterSimulator(n_replicas, self.policy,
+                               router_policy=self.router_policy,
+                               num_blocks=num_blocks,
+                               block_size=self.block_size,
+                               chunk_size=self.chunk_size,
+                               max_running=self.max_running, seed=self.seed,
+                               time_model=self.tm)
+        sim.submit_all(clone_requests(online) + clone_requests(offline))
+        return sim.run(max_iters=max_iters, until_time=duration)
+
+    def attainment_curve(self, online: Sequence[Request], *,
+                         candidate_replicas: Sequence[int] = (1, 2, 4),
+                         num_blocks: int = 256,
+                         duration: Optional[float] = None
+                         ) -> List[Tuple[int, float]]:
+        """min(TTFT, TPOT) attainment of the online peak vs. replica count
+        at a fixed per-replica block budget (monotone non-decreasing: more
+        replicas only ever dilute load)."""
+        out = []
+        for n in sorted(candidate_replicas):
+            stats = self.simulate(online, [], n, num_blocks,
+                                  duration=duration)
+            att = min(stats.slo_attainment("ttft"),
+                      stats.slo_attainment("tpot"))
+            out.append((n, att))
+        return out
+
+    # ------------------------------------------------------------- planning
+    def plan(self, online_peak: Sequence[Request],
+             offline: Sequence[Request], *,
+             candidate_replicas: Sequence[int] = (1, 2, 4),
+             candidate_blocks: Sequence[int] = (64, 128, 256),
+             slo_target: float = 0.9,
+             offline_target: Optional[float] = None,
+             duration: Optional[float] = None) -> FleetReport:
+        """Step 1: smallest fleet whose online attainment meets the target.
+        Step 2: at each SLO-feasible config, measure co-served offline
+        throughput; require ``offline_target`` too when given."""
+        report = FleetReport(None, None)
+        for n in sorted(candidate_replicas):
+            for nb in sorted(candidate_blocks):
+                stats = self.simulate(online_peak, [], n, nb,
+                                      duration=duration)
+                att = min(stats.slo_attainment("ttft"),
+                          stats.slo_attainment("tpot"))
+                report.slo_by_config.append((n, nb, att))
+                if att < slo_target:
+                    continue
+                full = self.simulate(online_peak, offline, n, nb,
+                                     duration=duration)
+                tput = full.offline_throughput()
+                report.throughput_by_config.append((n, nb, tput))
+                if offline_target is not None and tput < offline_target:
+                    continue        # bigger cache may lift throughput
+                report.min_replicas = n
+                report.blocks_per_replica = nb
+                report.offline_throughput = tput
+                return report
+        return report

@@ -1,0 +1,181 @@
+"""Replica: one EchoEngine plus the load signals a cluster router reads.
+
+A replica exports four signal families (ISSUE: cluster-scale co-serving):
+  * online pressure     — queue depth + TimeModel-predicted added latency
+  * memory headroom     — free KV blocks and eviction-threshold slack
+  * offline backlog     — pooled + pending + running offline work
+  * prefix locality     — the OfflinePool radix summary merged with what the
+                          BlockManager actually holds cached, keyed by the
+                          first-block chain hash of each document group
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.block_manager import chain_hash
+from repro.core.engine import EchoEngine
+from repro.core.estimator import TimeModel
+from repro.core.policies import ECHO, PolicyConfig
+from repro.core.request import Request
+
+
+def first_block_hash(req: Request, block_size: int) -> Optional[int]:
+    """Top-level radix group key of a request (None if under one block)."""
+    if len(req.prompt) < block_size:
+        return None
+    return chain_hash(0, tuple(req.prompt[:block_size]))
+
+
+@dataclass
+class ReplicaLoad:
+    """Point-in-time snapshot of one replica's signals (for reporting)."""
+    replica_id: int
+    now: float
+    online_queue: int
+    running_online: int
+    running_offline: int
+    offline_backlog: int
+    free_blocks: int
+    threshold_headroom: int
+    prefix_groups: Dict[int, int] = field(default_factory=dict)
+
+
+class Replica:
+    def __init__(self, replica_id: int, engine: EchoEngine):
+        self.id = replica_id
+        self.engine = engine
+        self.stalls = 0            # consecutive no-progress steps (see sim)
+        self.stolen_in = 0
+        self.stolen_out = 0
+
+    @classmethod
+    def simulated(cls, replica_id: int, policy: PolicyConfig = ECHO, *,
+                  num_blocks: int = 256, block_size: int = 16,
+                  chunk_size: int = 64, time_model: Optional[TimeModel] = None,
+                  max_batch_tokens: int = 2048, max_running: int = 64,
+                  seed: int = 0) -> "Replica":
+        eng = EchoEngine(None, None, policy, num_blocks=num_blocks,
+                         block_size=block_size, chunk_size=chunk_size,
+                         time_model=time_model, clock="virtual",
+                         seed=seed, max_batch_tokens=max_batch_tokens,
+                         max_running=max_running)
+        return cls(replica_id, eng)
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        self.engine.submit(req)
+        self.stalls = 0            # new work can unblock a drained replica
+
+    # ------------------------------------------------------------- signals
+    def has_work(self) -> bool:
+        eng = self.engine
+        return bool(eng.pending or eng.scheduler.online_queue
+                    or eng.scheduler.running or len(eng.pool))
+
+    def online_queue_depth(self) -> int:
+        n = len(self.engine.scheduler.online_queue)
+        n += sum(1 for r in self.engine.pending if r.is_online)
+        return n
+
+    def offline_backlog(self) -> int:
+        eng = self.engine
+        n = len(eng.pool)
+        n += sum(1 for r in eng.pending if not r.is_online)
+        n += sum(1 for r in eng.scheduler.running if not r.is_online)
+        return n
+
+    def threshold_headroom(self) -> int:
+        bm = self.engine.bm
+        return max(bm.threshold_blocks - bm.running_blocks, 0)
+
+    def prefix_summary(self) -> Dict[int, int]:
+        return self.engine.pool.prefix_summary()
+
+    def affinity(self, group_hash: Optional[int]) -> int:
+        """How much of this document group the replica already holds:
+        pooled members + in-flight members + 1 if the first block is still
+        resident in the KV cache (prefix reusable without recompute)."""
+        if group_hash is None:
+            return 0
+        eng = self.engine
+        bs = eng.bm.block_size
+        n = eng.pool.group_count(group_hash)
+        for r in eng.pending:
+            if not r.is_online and first_block_hash(r, bs) == group_hash:
+                n += 1
+        for r in eng.scheduler.running:
+            if not r.is_online and first_block_hash(r, bs) == group_hash:
+                n += 1
+        if group_hash in eng.bm.hash_to_bid:
+            n += 1
+        return n
+
+    def predicted_added_latency(self, req: Request) -> float:
+        """TimeModel-predicted time to this request's first token if placed
+        here: its own prefill plus all online prefill work ahead of it,
+        overlapped with the running decode batch (Eq.6-8), plus any clock
+        skew (a replica whose virtual clock is already past the arrival
+        cannot start it earlier than its own `now`)."""
+        sched = self.engine.scheduler
+        spans = [(0, len(req.prompt))]
+        for r in sched.online_queue:
+            spans.append((0, len(r.full_tokens)))
+        for r in self.engine.pending:
+            if r.is_online:
+                spans.append((0, len(r.full_tokens)))
+        for r in sched.running:
+            if r.is_online and not r.prefill_done:
+                spans.append((r.computed_tokens, r.prefill_target_len))
+        dlens = [r.total_len + 1 for r in sched.running
+                 if r.prefill_done and not r.done]
+        t = self.engine.tm.batch_time(spans, dlens)
+        return t + max(self.engine.now - req.arrival_time, 0.0)
+
+    def load(self) -> ReplicaLoad:
+        sched = self.engine.scheduler
+        return ReplicaLoad(
+            replica_id=self.id,
+            now=self.engine.now,
+            online_queue=self.online_queue_depth(),
+            running_online=sum(1 for r in sched.running if r.is_online),
+            running_offline=sum(1 for r in sched.running if not r.is_online),
+            offline_backlog=self.offline_backlog(),
+            free_blocks=self.engine.bm.free_blocks,
+            threshold_headroom=self.threshold_headroom(),
+            prefix_groups=self.prefix_summary(),
+        )
+
+    # ------------------------------------------------------------- stealing
+    def steal_offline(self, max_n: int) -> List[Request]:
+        """Yield up to ``max_n`` pooled (not yet admitted) offline requests,
+        whole loner groups first so the locality damage is minimal — the
+        groups this replica holds most of stay home."""
+        pool = self.engine.pool
+        bs = self.engine.bm.block_size
+        groups: Dict[int, List[Request]] = {}
+        for req in pool.requests():
+            key = pool.group_of(req)
+            groups.setdefault(key if key is not None else -req.rid,
+                              []).append(req)
+        for req in self.engine.pending:           # dispatched, not yet pulled
+            if not req.is_online:
+                key = first_block_hash(req, bs)
+                groups.setdefault(key if key is not None else -req.rid,
+                                  []).append(req)
+        out: List[Request] = []
+        order = sorted(groups.values(),
+                       key=lambda rs: (len(rs), min(r.rid for r in rs)))
+        for reqs in order:
+            for req in reqs:
+                if len(out) >= max_n:
+                    break
+                if req in self.engine.pending:
+                    self.engine.pending.remove(req)
+                else:
+                    pool.remove(req)
+                out.append(req)
+            if len(out) >= max_n:
+                break
+        self.stolen_out += len(out)
+        return out

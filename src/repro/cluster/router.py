@@ -1,0 +1,121 @@
+"""Cluster router: SLO-aware online placement + prefix-affinity offline
+dispatch + work-stealing rebalancing.
+
+Online requests always go to the replica with the lowest TimeModel-predicted
+added latency (least-loaded in SLO terms) — online placement never degrades
+to serve offline locality. Offline tasks are dispatched by the configured
+policy:
+
+  affinity     — route to the replica already holding the request's document
+                 group (pooled peers, in-flight peers, or the cached prefix
+                 itself); new groups go to the least-backlogged replica.
+  round_robin  — cycle over replicas (the scatter baseline).
+  random       — uniform random replica (seeded).
+
+When a replica's online load spikes, ``rebalance`` sheds pooled offline work
+(whole loner groups first) to the calmest replica — HyGen-style elastic
+co-location: offline flows to wherever online load is momentarily low.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from repro.cluster.replica import Replica, first_block_hash
+from repro.core.request import Request
+
+ROUTER_POLICIES = ("affinity", "round_robin", "random")
+
+
+@dataclass
+class RouterStats:
+    online_dispatched: int = 0
+    offline_dispatched: int = 0
+    affinity_hits: int = 0         # offline dispatches that found a home group
+    steals: int = 0                # rebalance events
+    stolen_requests: int = 0
+    per_replica_online: dict = field(default_factory=dict)
+    per_replica_offline: dict = field(default_factory=dict)
+
+
+class Router:
+    def __init__(self, replicas: Sequence[Replica], *,
+                 policy: str = "affinity", seed: int = 0,
+                 steal_queue_depth: int = 4, steal_batch: int = 8):
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(f"unknown router policy {policy!r}; "
+                             f"expected one of {ROUTER_POLICIES}")
+        self.replicas = list(replicas)
+        self.policy = policy
+        self.steal_queue_depth = steal_queue_depth
+        self.steal_batch = steal_batch
+        self._rng = np.random.default_rng(seed)
+        self._rr = 0
+        self.stats = RouterStats()
+        self._block_size = self.replicas[0].engine.bm.block_size
+
+    # ------------------------------------------------------------- dispatch
+    def dispatch(self, req: Request) -> Replica:
+        if req.is_online:
+            rep = self._place_online(req)
+            self.stats.online_dispatched += 1
+            self.stats.per_replica_online[rep.id] = \
+                self.stats.per_replica_online.get(rep.id, 0) + 1
+        else:
+            rep = self._place_offline(req)
+            self.stats.offline_dispatched += 1
+            self.stats.per_replica_offline[rep.id] = \
+                self.stats.per_replica_offline.get(rep.id, 0) + 1
+        rep.submit(req)
+        return rep
+
+    def _place_online(self, req: Request) -> Replica:
+        return min(self.replicas,
+                   key=lambda r: (r.predicted_added_latency(req), r.id))
+
+    def _place_offline(self, req: Request) -> Replica:
+        if self.policy == "round_robin":
+            rep = self.replicas[self._rr % len(self.replicas)]
+            self._rr += 1
+            return rep
+        if self.policy == "random":
+            return self.replicas[int(self._rng.integers(len(self.replicas)))]
+        group = first_block_hash(req, self._block_size)
+        scored = [(rep.affinity(group), rep) for rep in self.replicas]
+        best_aff = max(aff for aff, _ in scored)
+        if best_aff > 0:
+            self.stats.affinity_hits += 1
+            return min((rep for aff, rep in scored if aff == best_aff),
+                       key=lambda r: (r.offline_backlog(), r.id))
+        # unseen group: open its home on the least-backlogged replica
+        return min(self.replicas,
+                   key=lambda r: (r.offline_backlog(), r.id))
+
+    # ------------------------------------------------------------- stealing
+    def rebalance(self) -> int:
+        """Shed pooled offline work from replicas whose online queue has
+        spiked to the calmest replica. Returns requests moved."""
+        moved_total = 0
+        for rep in self.replicas:
+            if rep.online_queue_depth() < self.steal_queue_depth:
+                continue
+            if rep.offline_backlog() == 0:
+                continue
+            targets = [o for o in self.replicas if o is not rep
+                       and o.online_queue_depth() < self.steal_queue_depth]
+            if not targets:
+                continue
+            target = min(targets, key=lambda o: (o.online_queue_depth(),
+                                                 o.offline_backlog(), o.id))
+            moved = rep.steal_offline(self.steal_batch)
+            if not moved:
+                continue
+            for req in moved:
+                target.submit(req)
+            target.stolen_in += len(moved)
+            self.stats.steals += 1
+            self.stats.stolen_requests += len(moved)
+            moved_total += len(moved)
+        return moved_total

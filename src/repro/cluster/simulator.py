@@ -1,0 +1,136 @@
+"""ClusterSimulator: N EchoEngine replicas on one shared virtual clock.
+
+Event loop (deterministic): the next event is either the earliest pending
+arrival — dispatched through the Router using replica load at that instant —
+or a step of the busy replica with the smallest virtual ``now`` (ties broken
+by replica id). Each replica's iteration advances its own clock by the
+calibrated TimeModel, exactly the §5.4 single-engine methodology
+(core/simulator.py) lifted fleet-wide; periodic ``rebalance`` calls let the
+router shed offline work off replicas whose online load spiked.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from repro.cluster.replica import Replica
+from repro.cluster.router import Router, RouterStats
+from repro.core.engine import EngineStats
+from repro.core.estimator import TimeModel
+from repro.core.policies import ECHO, PolicyConfig
+from repro.core.request import Request
+
+_MAX_STALLS = 3       # mirrors EchoEngine.run's deadlock guard
+
+
+@dataclass
+class ClusterStats:
+    """Fleet-wide aggregate over per-replica EngineStats."""
+    replicas: List[EngineStats] = field(default_factory=list)
+    router: RouterStats = field(default_factory=RouterStats)
+    _merged: Optional[EngineStats] = field(default=None, init=False,
+                                           repr=False, compare=False)
+
+    def merged(self) -> EngineStats:
+        if self._merged is None:
+            m = EngineStats()
+            for st in self.replicas:
+                m.iterations.extend(st.iterations)
+                m.finished.extend(st.finished)
+            m.iterations.sort(key=lambda rec: rec.t)
+            self._merged = m
+        return self._merged
+
+    def offline_throughput(self) -> float:
+        """Fleet offline throughput: completed offline tokens over the
+        offline makespan across all replicas."""
+        return self.merged().offline_throughput()
+
+    def slo_attainment(self, kind: str = "ttft") -> float:
+        return self.merged().slo_attainment(kind)
+
+    def finished_counts(self) -> Tuple[int, int]:
+        m = self.merged()
+        on = sum(1 for r in m.finished if r.is_online)
+        off = len(m.finished) - on
+        return on, off
+
+    def per_replica_offline_tokens(self) -> List[int]:
+        return [sum(r.prompt_len + r.n_output
+                    for r in st.finished if not r.is_online)
+                for st in self.replicas]
+
+
+class ClusterSimulator:
+    def __init__(self, n_replicas: int, policy: PolicyConfig = ECHO, *,
+                 router_policy: str = "affinity",
+                 num_blocks: int = 256, block_size: int = 16,
+                 chunk_size: int = 64,
+                 time_model: Optional[TimeModel] = None,
+                 max_batch_tokens: int = 2048, max_running: int = 64,
+                 seed: int = 0, steal_queue_depth: int = 4,
+                 steal_batch: int = 8, rebalance_every: int = 8):
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        tm = time_model or TimeModel()
+        self.replicas = [
+            Replica.simulated(i, policy, num_blocks=num_blocks,
+                              block_size=block_size, chunk_size=chunk_size,
+                              time_model=tm,
+                              max_batch_tokens=max_batch_tokens,
+                              max_running=max_running, seed=seed + i)
+            for i in range(n_replicas)
+        ]
+        self.router = Router(self.replicas, policy=router_policy, seed=seed,
+                             steal_queue_depth=steal_queue_depth,
+                             steal_batch=steal_batch)
+        self.rebalance_every = rebalance_every
+        self._pending: List[Tuple[float, int, Request]] = []   # arrival heap
+        self._steps = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        heapq.heappush(self._pending, (req.arrival_time, req.rid, req))
+
+    def submit_all(self, reqs: Sequence[Request]) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    # ------------------------------------------------------------- loop
+    def _busy(self) -> List[Replica]:
+        return [r for r in self.replicas
+                if r.has_work() and r.stalls <= _MAX_STALLS]
+
+    def run(self, max_iters: int = 200_000,
+            until_time: Optional[float] = None) -> ClusterStats:
+        for _ in range(max_iters):
+            busy = self._busy()
+            t_arr = self._pending[0][0] if self._pending else None
+            if not busy and t_arr is None:
+                break
+            t_busy = min((r.engine.now for r in busy), default=float("inf"))
+            t_next = min(t_busy, t_arr) if t_arr is not None else t_busy
+            if until_time is not None and t_next >= until_time:
+                break
+            if t_arr is not None and t_arr <= t_busy:
+                _, _, req = heapq.heappop(self._pending)
+                self.router.dispatch(req)
+                continue
+            rep = min(busy, key=lambda r: (r.engine.now, r.id))
+            before = rep.engine.now
+            rec = rep.engine.step()
+            if rec is None and not rep.engine.pending \
+                    and rep.engine.now <= before:
+                rep.stalls += 1         # unschedulable backlog: back off
+            else:
+                rep.stalls = 0
+            self._steps += 1
+            if self._steps % self.rebalance_every == 0:
+                self.router.rebalance()
+        return self.stats()
+
+    # ------------------------------------------------------------- results
+    def stats(self) -> ClusterStats:
+        return ClusterStats(replicas=[r.engine.stats for r in self.replicas],
+                            router=self.router.stats)

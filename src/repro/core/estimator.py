@@ -31,6 +31,16 @@ class TimeModel:
     lam: float = 0.8         # prefill/decode overlap coefficient
     quadratic_prefill: bool = True
 
+    @classmethod
+    def a100(cls, **overrides) -> "TimeModel":
+        """Coefficients of LLaMA-3.1-8B-instruct magnitude on one A100-40G,
+        structured per Eq.6-8 — the shared default for virtual-clock serving,
+        cluster simulation, benchmarks, and examples."""
+        kw = dict(alpha=2e-7, beta=1e-4, c=2e-3, gamma=3e-5, delta=3e-5,
+                  d0=2e-3, lam=0.9)
+        kw.update(overrides)
+        return cls(**kw)
+
     # ------------------------------------------------------------ queries
     def prefill_time(self, spans: Sequence[Tuple[int, int]]) -> float:
         """Prefill chunks are processed one by one (§5.2).

@@ -100,6 +100,28 @@ class OfflinePool:
         """Future-reuse count of a cached block hash (paper's RC metadata)."""
         return self.hash_count.get(h, 0)
 
+    def prefix_summary(self) -> Dict[int, int]:
+        """Compact radix summary: pooled request count per top-level subtree
+        (≈ document group), keyed by first-block chain hash. This is the
+        signal a cluster router matches offline work against."""
+        return {h: node.count for h, node in self.root.children.items()}
+
+    def group_count(self, h: Optional[int]) -> int:
+        """One prefix_summary entry without building the whole dict."""
+        node = self.root.children.get(h) if h is not None else None
+        return node.count if node is not None else 0
+
+    def group_of(self, req: Request) -> Optional[int]:
+        """Top-level subtree key of a pooled request (None if its prompt is
+        shorter than one block)."""
+        chain = self._chains.get(req.rid)
+        return chain[0] if chain else None
+
+    def requests(self) -> Iterable[Request]:
+        """All pooled requests, bucket-major insertion order."""
+        for bucket in self.buckets:
+            yield from bucket.values()
+
     def fcfs_head(self) -> Optional[Request]:
         best = None
         for bucket in self.buckets:

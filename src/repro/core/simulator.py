@@ -21,7 +21,9 @@ from repro.core.policies import ECHO, PolicyConfig
 from repro.core.request import Request
 
 
-def _clone(reqs: Sequence[Request]) -> List[Request]:
+def clone_requests(reqs: Sequence[Request]) -> List[Request]:
+    """Fresh, unstarted copies — requests mutate as they run, so every
+    simulation must get its own."""
     out = []
     for r in reqs:
         out.append(Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
@@ -38,7 +40,7 @@ def simulate(online: Sequence[Request], offline: Sequence[Request],
     eng = EchoEngine(None, None, policy, num_blocks=num_blocks,
                      block_size=block_size, chunk_size=chunk_size,
                      time_model=time_model)
-    for r in _clone(online) + _clone(offline):
+    for r in clone_requests(online) + clone_requests(offline):
         eng.submit(r)
     return eng.run(max_iters=max_iters, until_time=duration)
 

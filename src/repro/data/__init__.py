@@ -1,4 +1,8 @@
+from repro.data.multi_tenant import (TenantSpec, default_tenants,
+                                     make_multi_tenant_workload)
 from repro.data.trace import BurstyTrace
 from repro.data.workload import make_offline_corpus, make_online_requests
 
-__all__ = ["BurstyTrace", "make_offline_corpus", "make_online_requests"]
+__all__ = ["BurstyTrace", "TenantSpec", "default_tenants",
+           "make_multi_tenant_workload", "make_offline_corpus",
+           "make_online_requests"]

@@ -7,6 +7,12 @@ online trace + offline batch corpus, and prints the paper's metrics.
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
       --policy Echo --duration 30
+
+With ``--replicas N`` (N > 1) the driver instead dry-runs a cluster of N
+virtual-clock replicas behind the prefix-affinity router on a multi-tenant
+workload — no model execution, the §5.4 simulator methodology fleet-wide:
+
+  PYTHONPATH=src python -m repro.launch.serve --replicas 4 --router affinity
 """
 from __future__ import annotations
 
@@ -60,9 +66,57 @@ def calibrate(model: Model, params, *, chunk_size=64, num_blocks=192,
     return tm
 
 
+def serve_cluster(args) -> None:
+    """--replicas N dry-run: co-serve a multi-tenant workload across N
+    virtual-clock replicas behind the router and print fleet metrics.
+    --online-rate scales the fleet-wide arrival rate across tenants;
+    --n-docs/--questions size each tenant's offline corpus."""
+    import dataclasses
+
+    from repro.cluster import ClusterSimulator
+    from repro.data import default_tenants, make_multi_tenant_workload
+
+    policy = POLICY_BY_NAME[args.policy]
+    tm = TimeModel.a100()
+    base = default_tenants(args.tenants)
+    scale = args.online_rate / sum(t.online_rate for t in base)
+    tenants = tuple(dataclasses.replace(t, online_rate=t.online_rate * scale,
+                                        n_docs=args.n_docs,
+                                        questions_per_doc=args.questions)
+                    for t in base)
+    online, offline = make_multi_tenant_workload(
+        tenants, args.duration, seed=args.seed)
+    sim = ClusterSimulator(args.replicas, policy,
+                           router_policy=args.router,
+                           num_blocks=args.num_blocks,
+                           time_model=tm, seed=args.seed)
+    sim.submit_all(online + offline)
+    stats = sim.run(until_time=args.duration * 4)
+
+    on_done, off_done = stats.finished_counts()
+    print(f"policy={policy.name} router={args.router} "
+          f"replicas={args.replicas}")
+    print(f"online finished: {on_done}/{len(online)}  "
+          f"offline finished: {off_done}/{len(offline)}")
+    print(f"fleet offline throughput: {stats.offline_throughput():.1f} "
+          f"tok/s (virtual)")
+    print(f"SLO attainment: TTFT {stats.slo_attainment('ttft'):.3f}  "
+          f"TPOT {stats.slo_attainment('tpot'):.3f}")
+    print(f"router: affinity hits {stats.router.affinity_hits}/"
+          f"{stats.router.offline_dispatched}  "
+          f"stolen {stats.router.stolen_requests}")
+    for rep, toks in zip(sim.replicas, stats.per_replica_offline_tokens()):
+        print(f"  replica {rep.id}: offline tokens {toks}  "
+              f"online served {stats.router.per_replica_online.get(rep.id, 0)}  "
+              f"hit rate {rep.engine.bm.metrics.hit_rate:.3f}  "
+              f"t={rep.engine.now:.1f}s")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b")
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b",
+                    help="model to serve (ignored with --replicas>1: the "
+                         "cluster dry-run is model-free)")
     ap.add_argument("--policy", choices=list(POLICY_BY_NAME), default="Echo")
     ap.add_argument("--duration", type=float, default=20.0)
     ap.add_argument("--num-blocks", type=int, default=192)
@@ -70,16 +124,25 @@ def main() -> None:
     ap.add_argument("--n-docs", type=int, default=6)
     ap.add_argument("--questions", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="N>1: dry-run a virtual N-replica cluster")
+    ap.add_argument("--router", default="affinity",
+                    choices=("affinity", "round_robin", "random"))
+    ap.add_argument("--tenants", type=int, default=3,
+                    help="tenant count for the --replicas workload")
     args = ap.parse_args()
+
+    if args.replicas > 1:
+        serve_cluster(args)
+        return
 
     cfg = get_config(args.arch).reduced()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     policy = POLICY_BY_NAME[args.policy]
 
-    tm = TimeModel(alpha=2e-7, beta=1e-4, c=2e-3, gamma=3e-5, delta=3e-5,
-                   d0=2e-3, lam=0.9,
-                   quadratic_prefill=cfg.family not in ("ssm", "hybrid"))
+    tm = TimeModel.a100(
+        quadratic_prefill=cfg.family not in ("ssm", "hybrid"))
     trace = BurstyTrace(base_rate=args.online_rate, tidal_period=4 * args.duration,
                         seed=args.seed)
     arrivals = trace.sample(0, args.duration)

@@ -1,5 +1,7 @@
 """BlockManager unit + property tests (§4.2 semantics)."""
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.block_manager import (BlockManager, ONLINE_FINISHED_PRIORITY,

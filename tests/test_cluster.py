@@ -1,0 +1,191 @@
+"""Cluster subsystem: router placement, work stealing, fleet determinism,
+and planner monotonicity."""
+from repro.cluster import (ClusterSimulator, FleetPlanner, Replica, Router,
+                           first_block_hash)
+from repro.core import ECHO, SLO, Request, TaskType, TimeModel
+from repro.core.simulator import clone_requests
+from repro.data import (TenantSpec, default_tenants,
+                        make_multi_tenant_workload)
+
+def _tm():
+    return TimeModel.a100()
+
+
+def _replicas(n, *, num_blocks=96, seed=0):
+    tm = _tm()
+    return [Replica.simulated(i, ECHO, num_blocks=num_blocks, time_model=tm,
+                              seed=seed + i) for i in range(n)]
+
+
+def _online(plen=64, t=0.0, max_new=8):
+    return Request(prompt=tuple(range(plen)), max_new_tokens=max_new,
+                   task_type=TaskType.ONLINE, arrival_time=t,
+                   slo=SLO(1.0, 0.1))
+
+
+def _offline(prompt, t=0.0, max_new=4):
+    return Request(prompt=tuple(prompt), max_new_tokens=max_new,
+                   task_type=TaskType.OFFLINE, arrival_time=t)
+
+
+def _workload(duration=12.0, seed=0, n_docs=4, questions=16):
+    tenants = (TenantSpec("a", online_rate=1.0, n_docs=n_docs,
+                          questions_per_doc=questions),
+               TenantSpec("b", online_rate=0.5, slo=SLO(1.5, 0.15),
+                          n_docs=n_docs, questions_per_doc=questions))
+    return make_multi_tenant_workload(tenants, duration, seed=seed)
+
+
+# ---------------------------------------------------------------- placement
+def test_online_goes_to_least_loaded_replica():
+    reps = _replicas(2)
+    router = Router(reps, policy="affinity")
+    # pile online work onto replica 0's queue
+    for i in range(6):
+        reps[0].engine.scheduler.online_queue.append(_online(128, t=0.0))
+    placed = router.dispatch(_online(64, t=0.0))
+    assert placed is reps[1]
+
+
+def test_online_wins_placement_over_offline_backlog():
+    """Online placement ignores offline backlog: the replica drowning in
+    offline pool work but idle online-wise still gets the online request."""
+    reps = _replicas(2)
+    router = Router(reps, policy="affinity")
+    doc = tuple(range(1000, 1256))
+    for i in range(20):     # replica 1: heavy *pooled* offline backlog
+        reps[1].engine.scheduler.submit(_offline(doc + (i, i, i, i)))
+    # replica 0: online queue -> predicted latency higher there
+    for i in range(4):
+        reps[0].engine.scheduler.online_queue.append(_online(128))
+    placed = router.dispatch(_online(64))
+    assert placed is reps[1]
+
+
+def test_affinity_routes_group_to_home_replica():
+    reps = _replicas(2)
+    router = Router(reps, policy="affinity")
+    bs = reps[0].engine.bm.block_size
+    doc_a = tuple(range(300, 300 + 4 * bs))
+    doc_b = tuple(range(600, 600 + 4 * bs))
+    first = router.dispatch(_offline(doc_a + (1, 2)))
+    # same document group follows its home replica
+    for i in range(3):
+        assert router.dispatch(_offline(doc_a + (10 + i,))) is first
+    # a fresh group opens on the *other* (least-backlogged) replica
+    other = router.dispatch(_offline(doc_b + (1, 2)))
+    assert other is not first
+    assert router.stats.affinity_hits == 3
+    fh = first_block_hash(_offline(doc_a), bs)
+    assert first.affinity(fh) > 0
+    # once the engine pulls arrivals into its pool, the group shows up in
+    # the exported radix summary
+    first.engine.now = 1.0
+    first.engine._pull_arrivals()
+    assert first.prefix_summary()[fh] == 4
+
+
+def test_work_stealing_on_online_spike():
+    reps = _replicas(2)
+    router = Router(reps, policy="affinity", steal_queue_depth=4,
+                    steal_batch=8)
+    doc = tuple(range(2000, 2128))
+    for i in range(10):
+        reps[0].engine.scheduler.submit(_offline(doc + (i,)))
+    assert reps[0].offline_backlog() == 10
+    router.rebalance()
+    assert router.stats.steals == 0          # no spike yet: nothing moves
+    for i in range(5):                        # online load spikes on 0
+        reps[0].engine.scheduler.online_queue.append(_online(128))
+    moved = router.rebalance()
+    assert moved > 0
+    assert reps[1].offline_backlog() == moved
+    assert reps[0].stolen_out == moved and reps[1].stolen_in == moved
+
+
+# ---------------------------------------------------------------- simulator
+def _fingerprint(stats):
+    m = stats.merged()
+    iters = [(round(r.t, 9), r.n_prefill, r.n_decode, r.offline_tokens,
+              r.online_tokens) for r in m.iterations]
+    finished = sorted((r.arrival_time, r.prompt_len, r.max_new_tokens,
+                       round(r.finish_time, 9)) for r in m.finished)
+    return iters, finished
+
+
+def test_cluster_simulator_deterministic_on_virtual_clock():
+    online, offline = _workload()
+
+    def run_once():
+        sim = ClusterSimulator(3, ECHO, router_policy="affinity",
+                               num_blocks=96, time_model=_tm(), seed=0)
+        sim.submit_all(clone_requests(online) + clone_requests(offline))
+        return _fingerprint(sim.run(until_time=60.0))
+
+    assert run_once() == run_once()
+
+
+def test_cluster_completes_all_work_and_aggregates():
+    online, offline = _workload()
+    sim = ClusterSimulator(2, ECHO, router_policy="affinity", num_blocks=96,
+                           time_model=_tm(), seed=0)
+    sim.submit_all(clone_requests(online) + clone_requests(offline))
+    stats = sim.run(until_time=120.0)
+    on, off = stats.finished_counts()
+    assert on == len(online) and off == len(offline)
+    assert stats.offline_throughput() > 0
+    # fleet aggregation really spans replicas
+    assert all(st.iterations for st in stats.replicas)
+    assert sum(stats.per_replica_offline_tokens()) == sum(
+        r.prompt_len + r.n_output
+        for r in stats.merged().finished if not r.is_online)
+
+
+def test_affinity_beats_random_on_shared_prefix_corpus():
+    online, offline = _workload(n_docs=6, questions=20)
+
+    def tput(policy):
+        sim = ClusterSimulator(2, ECHO, router_policy=policy, num_blocks=96,
+                               time_model=_tm(), seed=0)
+        sim.submit_all(clone_requests(online) + clone_requests(offline))
+        stats = sim.run(until_time=120.0)
+        return (stats.offline_throughput(), stats.slo_attainment("ttft"))
+
+    aff_tput, aff_slo = tput("affinity")
+    rnd_tput, rnd_slo = tput("random")
+    assert aff_tput > rnd_tput
+    assert aff_slo >= rnd_slo
+
+
+# ---------------------------------------------------------------- planner
+def test_fleet_planner_slo_monotone_in_replicas():
+    """More replicas only dilute online load: attainment non-decreasing."""
+    import dataclasses
+    tenants = tuple(dataclasses.replace(t, online_rate=t.online_rate * 12)
+                    for t in default_tenants(2))
+    online, _ = make_multi_tenant_workload(tenants, 8.0, seed=3)
+    planner = FleetPlanner(_tm())
+    curve = planner.attainment_curve(online, candidate_replicas=(1, 2, 4),
+                                     num_blocks=96, duration=8.0)
+    atts = [a for _, a in curve]
+    assert atts == sorted(atts)
+    assert atts[-1] > atts[0]       # the sweep actually spans load regimes
+
+
+def test_fleet_planner_finds_min_feasible_fleet():
+    import dataclasses
+    tenants = tuple(dataclasses.replace(t, online_rate=t.online_rate * 12)
+                    for t in default_tenants(2))
+    online, offline = make_multi_tenant_workload(tenants, 8.0, seed=3)
+    planner = FleetPlanner(_tm())
+    rep = planner.plan(online, offline, candidate_replicas=(1, 2, 4),
+                       candidate_blocks=(96,), slo_target=0.9, duration=8.0)
+    assert rep.min_replicas is not None
+    assert rep.offline_throughput is not None and rep.offline_throughput > 0
+    chosen = [a for n, nb, a in rep.slo_by_config
+              if n == rep.min_replicas and nb == rep.blocks_per_replica]
+    assert chosen and chosen[0] >= 0.9
+    # every smaller probed fleet missed the target
+    for n, nb, att in rep.slo_by_config:
+        if n < rep.min_replicas:
+            assert att < 0.9

@@ -1,5 +1,8 @@
 """Estimator toolkits: Eq.6-8 fit recovery, memory + rate predictors."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.estimator import MemoryPredictor, RatePredictor, TimeModel

@@ -1,4 +1,7 @@
 """Offline pool: rc accounting + candidate structure."""
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.block_manager import chain_hash

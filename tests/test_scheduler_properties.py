@@ -1,4 +1,7 @@
 """Hypothesis property tests on scheduler/system invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ECHO, SLO, EchoEngine, Request, TaskType, TimeModel
