@@ -1,5 +1,7 @@
 """§5.2 table: time-model accuracy against real (wall-clock) engine runs on
-the tiny model — fit on micro-benchmarks, validate on held-out batches."""
+the tiny model — fit on micro-benchmarks, validate on held-out batches —
+plus the closed-loop view: convergence of the online-calibrated model
+against a perturbed ground-truth clock (virtual, model-free)."""
 from __future__ import annotations
 
 import time
@@ -66,4 +68,31 @@ def rows():
         out.append((f"estimator.decode_b{b}_c{ctx}", want * 1e6,
                     f"pred={got * 1e6:.0f}us err={errs[-1]:.2f}"))
     out.append(("estimator.mean_rel_err", 0.0, f"{np.mean(errs):.3f}"))
+    out.extend(convergence_rows())
     return out
+
+
+def convergence_rows(scale: float = 2.0, jitter: float = 0.02):
+    """Closed-loop accuracy: start from the stock A100 estimate, clock the
+    engine with a ``scale``-x perturbed ground truth, and report how fast
+    the ``OnlineCalibrator`` drives the relative error down (trailing-100
+    mean per milestone) against the same run with refitting disabled."""
+    import dataclasses
+
+    from benchmarks.scenario import build_engine, time_model
+    from repro.core import ECHO, OnlineCalibrator
+
+    rows_out = []
+    for mode, calibrate in (("static", False), ("calibrated", True)):
+        clock = time_model().perturbed(scale=scale, jitter=jitter, seed=7)
+        policy = dataclasses.replace(ECHO, calibrate=calibrate, name="conv")
+        eng, _, _, p = build_engine(policy, clock_model=clock)
+        if not calibrate:
+            eng.calibrator = OnlineCalibrator.passive(eng.tm)
+        eng.run(max_iters=30_000, until_time=p["duration"] * 6)
+        cal = eng.calibrator
+        for it, err in cal.convergence_curve(100)[:5]:
+            rows_out.append((f"estimator.{mode}.rel_err_iter{it}", 0.0,
+                             f"{err:.3f}"))
+        rows_out.append((f"estimator.{mode}.refits", 0.0, str(cal.refits)))
+    return rows_out

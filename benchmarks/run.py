@@ -26,7 +26,8 @@ def _section(name, fn, rows_out):
 
 
 def main() -> None:
-    from benchmarks import ablations, capacity, cluster, estimator_accuracy
+    from benchmarks import (ablations, calibration, capacity, cluster,
+                            estimator_accuracy)
     from benchmarks import figures, kernels_micro, roofline
 
     rows = []
@@ -37,6 +38,7 @@ def main() -> None:
     _section("fig10", figures.fig10_memory, rows)
     _section("fig11", figures.fig11_trace_prediction, rows)
     _section("estimator", estimator_accuracy.rows, rows)
+    _section("calibration", calibration.rows, rows)
     _section("capacity", capacity.rows, rows)
     _section("cluster", cluster.rows, rows)
     _section("kernels", kernels_micro.rows, rows)

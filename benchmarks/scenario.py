@@ -25,7 +25,8 @@ def time_model(**kw) -> TimeModel:
     return TimeModel.a100(**kw)
 
 
-def build_engine(policy: PolicyConfig, seed: int = 0, tm_kw=None, **overrides):
+def build_engine(policy: PolicyConfig, seed: int = 0, tm_kw=None,
+                 clock_model=None, **overrides):
     p = dict(DEFAULTS)
     p.update(overrides)
     tm = time_model(**(tm_kw or {}))
@@ -44,7 +45,8 @@ def build_engine(policy: PolicyConfig, seed: int = 0, tm_kw=None, **overrides):
                                   max_new=p["offline_new"], seed=seed + 30)
     eng = EchoEngine(None, None, policy, num_blocks=p["num_blocks"],
                      block_size=p["block_size"], chunk_size=p["chunk_size"],
-                     time_model=tm, max_running=p["max_running"])
+                     time_model=tm, clock_model=clock_model,
+                     max_running=p["max_running"])
     for r in online + offline:
         eng.submit(r)
     return eng, online, offline, p

@@ -1,0 +1,47 @@
+"""Calibration demo: the scheduler's time model vs. a drifted ground truth.
+
+The engine's scheduler starts from the stock A100 estimate while the
+actual hardware clock runs 2x slower with per-iteration jitter. A static
+estimate stays ~50% wrong forever; with --calibrate-style online refitting
+(`Echo+C`) the estimate converges onto the observed clock within a few
+hundred iterations, and the scheduler's SLO gating + offline admission
+decisions are priced correctly again.
+
+    PYTHONPATH=src python examples/calibration_demo.py
+"""
+from repro.core import (ECHO, ECHO_C, SLO, EchoEngine, OnlineCalibrator,
+                        TimeModel)
+from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
+
+
+def build(policy):
+    estimate = TimeModel.a100()                       # what the scheduler thinks
+    clock = TimeModel.a100().perturbed(scale=2.0,     # what the hardware does
+                                       jitter=0.02, seed=7)
+    eng = EchoEngine(None, None, policy, num_blocks=256, block_size=16,
+                     chunk_size=64, time_model=estimate, clock_model=clock,
+                     max_running=48)
+    trace = BurstyTrace(base_rate=3.0, tidal_period=120.0, seed=10)
+    online = make_online_requests(trace.sample(0, 60.0), prompt_mean=160,
+                                  prompt_std=40, max_new_mean=24,
+                                  slo=SLO(0.6, 0.05), seed=20)
+    offline = make_offline_corpus(10, 96, doc_len=320, question_len=32,
+                                  max_new=16, seed=30)
+    for r in online + offline:
+        eng.submit(r)
+    return eng
+
+
+for name, policy in (("static (Echo)", ECHO), ("calibrated (Echo+C)", ECHO_C)):
+    eng = build(policy)
+    if eng.calibrator is None:        # measure error without refitting
+        eng.calibrator = OnlineCalibrator.passive(eng.tm)
+    stats = eng.run(max_iters=60_000, until_time=360.0)
+    cal = eng.calibrator
+    print(f"[{name}]")
+    print(f"  estimate error: start "
+          f"{cal.convergence_curve(100)[0][1]:.1%} -> "
+          f"last-100 {cal.mean_rel_err(100):.1%}  (refits: {cal.refits})")
+    print(f"  SLO attainment: TTFT {stats.slo_attainment('ttft'):.3f}  "
+          f"TPOT {stats.slo_attainment('tpot'):.3f}")
+    print(f"  offline throughput: {stats.offline_throughput():.0f} tok/s")

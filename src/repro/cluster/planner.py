@@ -35,11 +35,18 @@ class FleetPlanner:
     def __init__(self, time_model: TimeModel, *,
                  policy: PolicyConfig = ECHO,
                  router_policy: str = "affinity",
+                 clock_models: Optional[Sequence] = None,
                  block_size: int = 16, chunk_size: int = 64,
                  max_running: int = 64, seed: int = 0):
+        """``clock_models``: per-replica ground-truth hardware profiles
+        (cycled across the fleet) — plan over a *mixed-hardware* fleet, e.g.
+        ``[TimeModel.a100(), TimeModel.h100()]``, while every replica's
+        scheduler starts from the same ``time_model`` estimate (pair with a
+        calibrating policy so each replica learns its own hardware)."""
         self.tm = time_model
         self.policy = policy
         self.router_policy = router_policy
+        self.clock_models = list(clock_models) if clock_models else None
         self.block_size = block_size
         self.chunk_size = chunk_size
         self.max_running = max_running
@@ -56,7 +63,8 @@ class FleetPlanner:
                                block_size=self.block_size,
                                chunk_size=self.chunk_size,
                                max_running=self.max_running, seed=self.seed,
-                               time_model=self.tm)
+                               time_model=self.tm,
+                               clock_models=self.clock_models)
         sim.submit_all(clone_requests(online) + clone_requests(offline))
         return sim.run(max_iters=max_iters, until_time=duration)
 

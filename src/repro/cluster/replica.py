@@ -53,11 +53,16 @@ class Replica:
     def simulated(cls, replica_id: int, policy: PolicyConfig = ECHO, *,
                   num_blocks: int = 256, block_size: int = 16,
                   chunk_size: int = 64, time_model: Optional[TimeModel] = None,
+                  clock_model=None,
                   max_batch_tokens: int = 2048, max_running: int = 64,
                   seed: int = 0) -> "Replica":
+        """``time_model`` is this replica's *estimate* (what its scheduler
+        believes); ``clock_model`` its ground-truth hardware profile — pass
+        different ones per replica for a heterogeneous/miscalibrated fleet."""
         eng = EchoEngine(None, None, policy, num_blocks=num_blocks,
                          block_size=block_size, chunk_size=chunk_size,
-                         time_model=time_model, clock="virtual",
+                         time_model=time_model, clock_model=clock_model,
+                         clock="virtual",
                          seed=seed, max_batch_tokens=max_batch_tokens,
                          max_running=max_running)
         return cls(replica_id, eng)
@@ -112,11 +117,13 @@ class Replica:
         return n
 
     def predicted_added_latency(self, req: Request) -> float:
-        """TimeModel-predicted time to this request's first token if placed
-        here: its own prefill plus all online prefill work ahead of it,
-        overlapped with the running decode batch (Eq.6-8), plus any clock
-        skew (a replica whose virtual clock is already past the arrival
-        cannot start it earlier than its own `now`)."""
+        """Replica-local time to this request's first token if placed here:
+        its own prefill plus all online prefill work ahead of it, overlapped
+        with the running decode batch (Eq.6-8), plus any clock skew (a
+        replica whose virtual clock is already past the arrival cannot start
+        it earlier than its own `now`). Uses this replica's own — possibly
+        online-calibrated — estimate model, so a slower (or drifted) replica
+        correctly reports longer predicted latency to the router."""
         sched = self.engine.scheduler
         spans = [(0, len(req.prompt))]
         for r in sched.online_queue:

@@ -10,6 +10,8 @@ router shed offline work off replicas whose online load spiked.
 """
 from __future__ import annotations
 
+import copy
+import dataclasses
 import heapq
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
@@ -17,7 +19,7 @@ from typing import List, Optional, Sequence, Tuple
 from repro.cluster.replica import Replica
 from repro.cluster.router import Router, RouterStats
 from repro.core.engine import EngineStats
-from repro.core.estimator import TimeModel
+from repro.core.estimator import PerturbedTimeModel, TimeModel
 from repro.core.policies import ECHO, PolicyConfig
 from repro.core.request import Request
 
@@ -68,16 +70,33 @@ class ClusterSimulator:
                  num_blocks: int = 256, block_size: int = 16,
                  chunk_size: int = 64,
                  time_model: Optional[TimeModel] = None,
+                 clock_models: Optional[Sequence] = None,
                  max_batch_tokens: int = 2048, max_running: int = 64,
                  seed: int = 0, steal_queue_depth: int = 4,
                  steal_batch: int = 8, rebalance_every: int = 8):
         if n_replicas < 1:
             raise ValueError("need at least one replica")
         tm = time_model or TimeModel()
+        # Each replica owns a *copy* of the estimate model: with online
+        # calibration the estimates drift apart per replica (heterogeneous
+        # fleets), and even without it a shared mutable model would couple
+        # replicas. ``clock_models`` (cycled when shorter than the fleet)
+        # sets per-replica ground-truth hardware profiles; None keeps the
+        # classic perfect-estimate simulator.
+        def clock_for(i: int):
+            if not clock_models:
+                return None
+            cm = clock_models[i % len(clock_models)]
+            if isinstance(cm, PerturbedTimeModel):
+                # independent noise streams even when profiles are cycled
+                cm = dataclasses.replace(cm, seed=cm.seed + i)
+            return cm
+
         self.replicas = [
             Replica.simulated(i, policy, num_blocks=num_blocks,
                               block_size=block_size, chunk_size=chunk_size,
-                              time_model=tm,
+                              time_model=copy.deepcopy(tm),
+                              clock_model=clock_for(i),
                               max_batch_tokens=max_batch_tokens,
                               max_running=max_running, seed=seed + i)
             for i in range(n_replicas)

@@ -1,15 +1,19 @@
 """Echo's primary contribution: scheduler + KV manager + estimators."""
 from repro.core.block_manager import BlockManager
+from repro.core.calibration import CalibrationSample, OnlineCalibrator
 from repro.core.engine import EchoEngine, EngineStats
-from repro.core.estimator import MemoryPredictor, RatePredictor, TimeModel
-from repro.core.policies import ALL_POLICIES, BS, BS_E, BS_E_S, ECHO, PolicyConfig
+from repro.core.estimator import (MemoryPredictor, PerturbedTimeModel,
+                                  RatePredictor, TimeModel)
+from repro.core.policies import (ALL_POLICIES, BS, BS_E, BS_E_S, ECHO,
+                                 ECHO_C, PolicyConfig)
 from repro.core.radix_pool import OfflinePool
 from repro.core.request import SLO, Request, RequestState, TaskType
 from repro.core.scheduler import Plan, Scheduler
 
 __all__ = [
-    "ALL_POLICIES", "BS", "BS_E", "BS_E_S", "ECHO",
-    "BlockManager", "EchoEngine", "EngineStats", "MemoryPredictor",
-    "OfflinePool", "Plan", "PolicyConfig", "RatePredictor", "Request",
+    "ALL_POLICIES", "BS", "BS_E", "BS_E_S", "ECHO", "ECHO_C",
+    "BlockManager", "CalibrationSample", "EchoEngine", "EngineStats",
+    "MemoryPredictor", "OfflinePool", "OnlineCalibrator",
+    "PerturbedTimeModel", "Plan", "PolicyConfig", "RatePredictor", "Request",
     "RequestState", "SLO", "Scheduler", "TaskType", "TimeModel",
 ]

@@ -306,6 +306,15 @@ class BlockManager:
             self._release_block(bid, now, unfinished=not finished)
         req.block_ids.clear()
 
+    def trim_request(self, req: Request, keep_tokens: int, now: float) -> None:
+        """Release blocks beyond the ``keep_tokens`` boundary — allocated for
+        a planned chunk that was then shed before computing anything, so no
+        work is lost: fresh blocks return to the free list, cache-hit blocks
+        just drop the extra reference and stay cached."""
+        keep = (keep_tokens + self.block_size - 1) // self.block_size
+        while len(req.block_ids) > keep:
+            self._release_block(req.block_ids.pop(), now)
+
     def touch(self, req: Request, now: float) -> None:
         for bid in req.block_ids:
             self.blocks[bid].lat = now

@@ -3,9 +3,12 @@
 Continuous-batching loop (vLLM-style): each iteration the scheduler emits a
 plan (prefill chunks + decode batch + preemptions); the engine executes it
 on the paged runner, advances the clock, feeds the estimators, and records
-metrics. The clock is either the calibrated time model ("virtual" — used by
-the SLO benchmarks; deterministic and hardware-independent, exactly the
-paper's simulator methodology) or wall time ("wall" — used to calibrate).
+metrics. The clock is either a ground-truth ``clock_model`` ("virtual" —
+used by the SLO benchmarks; deterministic, exactly the paper's simulator
+methodology) or wall time ("wall"). The scheduler's ``time_model`` is only
+an *estimate* of that clock: pass a different (or perturbed) ``clock_model``
+to study miscalibration, and an ``OnlineCalibrator`` (``policy.calibrate``)
+to refit the estimate from the observed iteration times (§5).
 """
 from __future__ import annotations
 
@@ -16,6 +19,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.block_manager import BlockManager
+from repro.core.calibration import OnlineCalibrator
 from repro.core.estimator import MemoryPredictor, TimeModel
 from repro.core.policies import PolicyConfig
 from repro.core.radix_pool import OfflinePool
@@ -66,18 +70,20 @@ class EngineStats:
         return total / (self.iterations[-1].t + 1e-9)
 
     def slo_attainment(self, kind: str = "ttft") -> float:
+        """Fraction of decidable online requests meeting the SLO. Requests
+        for which the metric is undefined (no first token for ttft; fewer
+        than 2 output tokens for tpot) are excluded from the denominator —
+        counting them as hits or misses would skew the two kinds opposite
+        ways."""
         online = [r for r in self.finished if r.is_online and r.slo]
-        if not online:
-            return 1.0
-        ok = 0
+        ok = n = 0
         for r in online:
-            if kind == "ttft":
-                v = r.ttft()
-                ok += (v is not None and v <= r.slo.ttft)
-            else:
-                v = r.tpot()
-                ok += (v is None or v <= r.slo.tpot)
-        return ok / len(online)
+            v = r.ttft() if kind == "ttft" else r.tpot()
+            if v is None:
+                continue
+            n += 1
+            ok += v <= (r.slo.ttft if kind == "ttft" else r.slo.tpot)
+        return ok / n if n else 1.0
 
 
 class EchoEngine:
@@ -90,6 +96,7 @@ class EchoEngine:
                  num_blocks: int = 256, block_size: int = 16,
                  chunk_size: int = 64, max_pages_per_seq: int = 32,
                  time_model: Optional[TimeModel] = None,
+                 clock_model=None, calibrator: Optional[OnlineCalibrator] = None,
                  clock: str = "virtual", seed: int = 0,
                  max_batch_tokens: int = 2048, max_running: int = 64):
         self.model = model
@@ -100,6 +107,14 @@ class EchoEngine:
                                task_aware=policy.task_aware_kv,
                                rc_provider=self.pool.rc)
         self.tm = time_model or TimeModel()
+        # Ground-truth clock vs. scheduler estimate (§5 calibration loop):
+        # `tm` is what the scheduler *believes*; `clock_model` is what the
+        # hardware *does* (a different preset or a PerturbedTimeModel).
+        # Defaulting to `tm` keeps the classic perfect-estimate simulator.
+        self.clock_model = clock_model if clock_model is not None else self.tm
+        self.calibrator = calibrator
+        if self.calibrator is None and policy.calibrate:
+            self.calibrator = OnlineCalibrator(self.tm)
         self.scheduler = Scheduler(self.bm, self.pool, self.tm, policy,
                                    chunk_size=chunk_size,
                                    max_batch_tokens=max_batch_tokens,
@@ -216,9 +231,12 @@ class EchoEngine:
         spans = [(r.computed_tokens - c, r.computed_tokens)
                  for r, c in plan.prefills]
         dlens = [r.total_len for r in decodes]
-        iter_time = (self.tm.batch_time(spans, dlens)
+        iter_time = (self.clock_model.batch_time(spans, dlens)
                      if self.clock == "virtual" else wall)
         self.now += iter_time
+        if self.calibrator is not None:
+            # feed the observed clock back into the scheduler's estimate
+            self.calibrator.observe(self.now, spans, dlens, iter_time)
         for req, lg in emissions:               # tokens arrive at iteration end
             self._emit(req, lg)
 

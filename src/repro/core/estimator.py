@@ -41,6 +41,34 @@ class TimeModel:
         kw.update(overrides)
         return cls(**kw)
 
+    @classmethod
+    def h100(cls, **overrides) -> "TimeModel":
+        """H100-80G magnitude: ~2.5x the A100 FLOPs and ~1.7x its HBM
+        bandwidth, so the quadratic attention term shrinks more than the
+        bandwidth-bound decode terms; floors shrink with faster dispatch."""
+        kw = dict(alpha=8e-8, beta=4e-5, c=1e-3, gamma=1.8e-5, delta=1.8e-5,
+                  d0=1.2e-3, lam=0.92)
+        kw.update(overrides)
+        return cls(**kw)
+
+    HW_PROFILES = ("a100", "h100")
+
+    @classmethod
+    def preset(cls, name: str, **overrides) -> "TimeModel":
+        if name not in cls.HW_PROFILES:
+            raise ValueError(f"unknown hardware profile {name!r}; "
+                             f"expected one of {cls.HW_PROFILES}")
+        return getattr(cls, name)(**overrides)
+
+    def perturbed(self, scale: float = 1.0, jitter: float = 0.0,
+                  contention_prob: float = 0.0, contention_scale: float = 2.0,
+                  seed: int = 0) -> "PerturbedTimeModel":
+        """Ground-truth wrapper: this model's Eq.6-8 structure, scaled by a
+        systematic miscalibration ``scale`` plus seeded per-iteration noise."""
+        return PerturbedTimeModel(base=self, scale=scale, jitter=jitter,
+                                  contention_prob=contention_prob,
+                                  contention_scale=contention_scale, seed=seed)
+
     # ------------------------------------------------------------ queries
     def prefill_time(self, spans: Sequence[Tuple[int, int]]) -> float:
         """Prefill chunks are processed one by one (§5.2).
@@ -69,19 +97,25 @@ class TimeModel:
         return self.lam * max(tp, td) + (1.0 - self.lam) * min(tp, td)
 
     # ------------------------------------------------------------ fitting
-    def fit_prefill(self, samples: Sequence[Tuple[int, float]]) -> None:
-        """samples: (prompt_len, seconds) for single-prefill iterations.
+    def fit_prefill(self, samples: Sequence[Tuple]) -> None:
+        """samples: (prompt_len, seconds) for single-prefill iterations, or
+        ((start, end), seconds) for mid-context chunks — the quadratic basis
+        of a span (s, e) is its attention increment e^2 - s^2 (see
+        ``prefill_time``), so both forms fit the same Eq.6 coefficients.
 
         Fit with an intercept column: on hosts where small-prefill cost is
         dominated by a dispatch floor (flat timings), an intercept-free
         quadratic fit extrapolates garbage; Eq.6's `c` absorbs the floor."""
         if len(samples) < 3:
             return
-        ls = np.array([s[0] for s in samples], np.float64)
-        ts = np.array([s[1] for s in samples], np.float64)
+        spans = [(0, x) if np.isscalar(x) else tuple(x)
+                 for x, _ in samples]
+        quad = np.array([e * e - s * s for s, e in spans], np.float64)
+        ls = np.array([e - s for s, e in spans], np.float64)
+        ts = np.array([t for _, t in samples], np.float64)
         ones = np.ones_like(ls)
         if self.quadratic_prefill:
-            basis = np.stack([ls * ls, ls, ones], axis=1)
+            basis = np.stack([quad, ls, ones], axis=1)
         else:
             basis = np.stack([ls, ones], axis=1)
         coef, *_ = np.linalg.lstsq(basis, ts, rcond=None)
@@ -119,6 +153,41 @@ class TimeModel:
             den += (hi - lo) ** 2
         if den > 0:
             self.lam = float(min(max(num / den, 0.0), 1.5))
+
+
+@dataclass
+class PerturbedTimeModel:
+    """Ground-truth execution clock distinct from the scheduler's estimate.
+
+    Wraps a base ``TimeModel`` (the true hardware profile) with a systematic
+    miscalibration factor, seeded multiplicative log-normal jitter, and rare
+    contention spikes (a neighbour stealing the GPU for one iteration).
+    ``batch_time`` is stateful — each call draws fresh noise — so it must
+    only clock execution, never score scheduling candidates."""
+    base: TimeModel
+    scale: float = 1.0              # systematic drift vs. the estimate
+    jitter: float = 0.0             # sigma of per-iteration log-normal noise
+    contention_prob: float = 0.0    # chance an iteration hits contention
+    contention_scale: float = 2.0   # slowdown of a contended iteration
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def mean_time(self, prefill_spans: Sequence[Tuple[int, int]],
+                  decode_lens: Sequence[int]) -> float:
+        """Noise-free expected iteration time (for analysis/tests)."""
+        return self.base.batch_time(prefill_spans, decode_lens) * self.scale
+
+    def batch_time(self, prefill_spans: Sequence[Tuple[int, int]],
+                   decode_lens: Sequence[int]) -> float:
+        t = self.mean_time(prefill_spans, decode_lens)
+        if self.jitter > 0.0:
+            t *= float(self._rng.lognormal(0.0, self.jitter))
+        if self.contention_prob > 0.0 and \
+                self._rng.random() < self.contention_prob:
+            t *= self.contention_scale
+        return t
 
 
 @dataclass
@@ -160,20 +229,32 @@ class RatePredictor:
     window: float = 900.0
     k_sigma: float = 2.0
     _arrivals: Deque[float] = field(default_factory=deque)
+    _t0: Optional[float] = None          # first observation: history start
 
     def observe(self, t: float) -> None:
+        if self._t0 is None:
+            self._t0 = t
         self._arrivals.append(t)
         cutoff = t - self.window
         while self._arrivals and self._arrivals[0] < cutoff:
             self._arrivals.popleft()
 
     def predict_rate(self, now: float, bin_s: float = 60.0) -> float:
-        """Predicted arrivals/s = mu + sigma of per-bin counts in window."""
-        cutoff = now - self.window
-        arr = [a for a in self._arrivals if a >= cutoff]
-        if not arr:
+        """Predicted arrivals/s = mu + sigma of per-bin counts, binned only
+        over *elapsed* history: during warmup (observed span < window) bins
+        before the first observation would be structurally empty and dilute
+        the rate ~window/elapsed-fold."""
+        if not self._arrivals:
             return 0.0
-        nbins = max(int(self.window / bin_s), 1)
+        span = min(self.window, now - self._t0)
+        if span <= bin_s:
+            # under one full bin of history: single-bin mean, no sigma yet
+            # (span clamped: sub-second history cannot resolve a rate)
+            arr = [a for a in self._arrivals if a >= now - max(span, 0.0)]
+            return len(arr) / max(span, 1.0)
+        nbins = int(span / bin_s)            # whole bins of real history
+        cutoff = now - nbins * bin_s
+        arr = [a for a in self._arrivals if a >= cutoff]
         counts = np.zeros(nbins)
         for a in arr:
             b = min(int((a - cutoff) / bin_s), nbins - 1)

@@ -132,20 +132,27 @@ class OfflinePool:
         return best
 
     def candidates(self, max_per_bucket: int = 4) -> Iterable[Request]:
-        """Representative requests: per bucket, per top-level subtree head."""
+        """Representative requests: per bucket, per top-level subtree, the
+        FCFS head by (arrival_time, rid) — like ``fcfs_head``. Insertion
+        order must not decide: a preempted request is re-``add``-ed at the
+        tail of its bucket's OrderedDict, and picking heads by insertion
+        order would starve it behind newer arrivals forever.
+
+        Cost: one pass over each bucket plus a sort of the (few) group
+        heads — same O(pool) per call as ``fcfs_head``, which the
+        non-KV-aware scheduler already pays every iteration."""
         for bucket in self.buckets:
-            seen_groups = set()
-            n = 0
+            heads: Dict[int, Request] = {}
             for req in bucket.values():
                 chain = self._chains[req.rid]
                 group = chain[0] if chain else req.rid
-                if group in seen_groups:
-                    continue
-                seen_groups.add(group)
-                yield req
-                n += 1
-                if n >= max_per_bucket:
-                    break
+                cur = heads.get(group)
+                if cur is None or (req.arrival_time, req.rid) < \
+                        (cur.arrival_time, cur.rid):
+                    heads[group] = req
+            ordered = sorted(heads.values(),
+                             key=lambda r: (r.arrival_time, r.rid))
+            yield from ordered[:max_per_bucket]
 
     def peers(self, req: Request, limit: int = 8) -> List[Request]:
         """Requests sharing the longest prefix with ``req`` (batch together)."""

@@ -317,7 +317,12 @@ class Scheduler:
                 self.pool.add(req)
         plan.decodes = kept
 
-        # 3. SLO feasibility of the mandatory part: shed offline work
+        # 3. SLO feasibility of the mandatory part: shed offline work.
+        # Shedding removes the chunk from the plan AND rolls its freshly
+        # allocated blocks back to the computed-token boundary — otherwise
+        # the request keeps holding blocks for work it won't do this
+        # iteration, inflating running_blocks/depleting free memory for
+        # same-iteration offline admission.
         budget = self._slo_budget(now, plan)
         if self.policy.use_estimator:
             while self._estimate(plan) > budget:
@@ -326,11 +331,14 @@ class Scheduler:
                 if off_pf:
                     r, c = off_pf[-1]
                     plan.prefills.remove((r, c))
+                    self.bm.trim_request(r, r.computed_tokens, now)
                     continue
                 off_dec = [r for r in plan.decodes
                            if r.task_type == TaskType.OFFLINE]
                 if off_dec:
-                    plan.decodes.remove(off_dec[-1])   # skip this iteration
+                    r = off_dec[-1]
+                    plan.decodes.remove(r)             # skip this iteration
+                    self.bm.trim_request(r, r.computed_tokens, now)
                     continue
                 break
 

@@ -35,11 +35,14 @@ def clone_requests(reqs: Sequence[Request]) -> List[Request]:
 def simulate(online: Sequence[Request], offline: Sequence[Request],
              time_model: TimeModel, num_blocks: int, *,
              policy: PolicyConfig = ECHO, block_size: int = 16,
-             chunk_size: int = 64, duration: Optional[float] = None,
+             chunk_size: int = 64, clock_model=None,
+             duration: Optional[float] = None,
              max_iters: int = 20_000) -> EngineStats:
+    """``clock_model`` (optional) is the ground-truth clock when it differs
+    from the scheduler's ``time_model`` estimate — §5 calibration studies."""
     eng = EchoEngine(None, None, policy, num_blocks=num_blocks,
                      block_size=block_size, chunk_size=chunk_size,
-                     time_model=time_model)
+                     time_model=time_model, clock_model=clock_model)
     for r in clone_requests(online) + clone_requests(offline):
         eng.submit(r)
     return eng.run(max_iters=max_iters, until_time=duration)

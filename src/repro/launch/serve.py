@@ -13,10 +13,20 @@ virtual-clock replicas behind the prefix-affinity router on a multi-tenant
 workload — no model execution, the §5.4 simulator methodology fleet-wide:
 
   PYTHONPATH=src python -m repro.launch.serve --replicas 4 --router affinity
+
+Ground truth vs. estimate (§5 calibration loop): ``--hw-profile`` selects
+the true hardware clock (comma-separated to cycle profiles over a
+heterogeneous fleet), ``--hw-drift``/``--hw-jitter`` perturb it away from
+the scheduler's stock A100 estimate, and ``--calibrate`` turns on the
+online refitting that closes the gap:
+
+  PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
+      --hw-profile a100,h100 --hw-drift 2.0 --calibrate
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 
@@ -26,6 +36,33 @@ from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
 from repro.models import Model
 
 POLICY_BY_NAME = {p.name: p for p in ALL_POLICIES}
+
+
+def resolve_policy(args):
+    policy = POLICY_BY_NAME[args.policy]
+    if args.calibrate:
+        policy = dataclasses.replace(policy, calibrate=True,
+                                     name=policy.name + "+C")
+    return policy
+
+
+def clock_models(args, *, quadratic_prefill: bool = True):
+    """Ground-truth clocks from --hw-profile/--hw-drift/--hw-jitter; None
+    when they match the stock estimate (classic perfect-clock serving)."""
+    names = [n.strip() for n in args.hw_profile.split(",") if n.strip()]
+    perturbed = args.hw_drift != 1.0 or args.hw_jitter > 0.0
+    if names == ["a100"] and not perturbed:
+        return None
+    out = []
+    for i, name in enumerate(names):
+        base = TimeModel.preset(name, quadratic_prefill=quadratic_prefill)
+        if perturbed:
+            out.append(base.perturbed(scale=args.hw_drift,
+                                      jitter=args.hw_jitter,
+                                      seed=args.seed + 100 + i))
+        else:
+            out.append(base)
+    return out
 
 
 def calibrate(model: Model, params, *, chunk_size=64, num_blocks=192,
@@ -71,12 +108,10 @@ def serve_cluster(args) -> None:
     virtual-clock replicas behind the router and print fleet metrics.
     --online-rate scales the fleet-wide arrival rate across tenants;
     --n-docs/--questions size each tenant's offline corpus."""
-    import dataclasses
-
     from repro.cluster import ClusterSimulator
     from repro.data import default_tenants, make_multi_tenant_workload
 
-    policy = POLICY_BY_NAME[args.policy]
+    policy = resolve_policy(args)
     tm = TimeModel.a100()
     base = default_tenants(args.tenants)
     scale = args.online_rate / sum(t.online_rate for t in base)
@@ -89,7 +124,8 @@ def serve_cluster(args) -> None:
     sim = ClusterSimulator(args.replicas, policy,
                            router_policy=args.router,
                            num_blocks=args.num_blocks,
-                           time_model=tm, seed=args.seed)
+                           time_model=tm, clock_models=clock_models(args),
+                           seed=args.seed)
     sim.submit_all(online + offline)
     stats = sim.run(until_time=args.duration * 4)
 
@@ -106,10 +142,15 @@ def serve_cluster(args) -> None:
           f"{stats.router.offline_dispatched}  "
           f"stolen {stats.router.stolen_requests}")
     for rep, toks in zip(sim.replicas, stats.per_replica_offline_tokens()):
-        print(f"  replica {rep.id}: offline tokens {toks}  "
-              f"online served {stats.router.per_replica_online.get(rep.id, 0)}  "
-              f"hit rate {rep.engine.bm.metrics.hit_rate:.3f}  "
-              f"t={rep.engine.now:.1f}s")
+        line = (f"  replica {rep.id}: offline tokens {toks}  "
+                f"online served {stats.router.per_replica_online.get(rep.id, 0)}  "
+                f"hit rate {rep.engine.bm.metrics.hit_rate:.3f}  "
+                f"t={rep.engine.now:.1f}s")
+        cal = rep.engine.calibrator
+        if cal is not None:
+            line += (f"  calib: refits {cal.refits} "
+                     f"err {cal.mean_rel_err(100):.3f}")
+        print(line)
 
 
 def main() -> None:
@@ -130,6 +171,18 @@ def main() -> None:
                     choices=("affinity", "round_robin", "random"))
     ap.add_argument("--tenants", type=int, default=3,
                     help="tenant count for the --replicas workload")
+    ap.add_argument("--hw-profile", default="a100",
+                    help="ground-truth hardware clock preset(s): one of "
+                         f"{TimeModel.HW_PROFILES}, comma-separated to cycle "
+                         "profiles over a heterogeneous --replicas fleet")
+    ap.add_argument("--hw-drift", type=float, default=1.0,
+                    help="scale the ground-truth clock by this factor "
+                         "(2.0 = hardware runs 2x slower than the estimate)")
+    ap.add_argument("--hw-jitter", type=float, default=0.0,
+                    help="sigma of per-iteration log-normal clock noise")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="refit the scheduler's time model online from the "
+                         "observed clock (§5 closed loop)")
     args = ap.parse_args()
 
     if args.replicas > 1:
@@ -139,10 +192,15 @@ def main() -> None:
     cfg = get_config(args.arch).reduced()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    policy = POLICY_BY_NAME[args.policy]
+    policy = resolve_policy(args)
 
-    tm = TimeModel.a100(
-        quadratic_prefill=cfg.family not in ("ssm", "hybrid"))
+    quad = cfg.family not in ("ssm", "hybrid")
+    tm = TimeModel.a100(quadratic_prefill=quad)
+    clocks = clock_models(args, quadratic_prefill=quad)
+    if clocks and len(clocks) > 1:
+        print(f"warning: --replicas 1 uses only the first --hw-profile "
+              f"({args.hw_profile.split(',')[0].strip()}); extra profiles "
+              f"are ignored — pass --replicas N for a heterogeneous fleet")
     trace = BurstyTrace(base_rate=args.online_rate, tidal_period=4 * args.duration,
                         seed=args.seed)
     arrivals = trace.sample(0, args.duration)
@@ -155,7 +213,8 @@ def main() -> None:
 
     eng = EchoEngine(model, params, policy, num_blocks=args.num_blocks,
                      block_size=16, chunk_size=64,
-                     max_pages_per_seq=32, time_model=tm)
+                     max_pages_per_seq=32, time_model=tm,
+                     clock_model=clocks[0] if clocks else None)
     for r in online + offline:
         eng.submit(r)
     stats = eng.run(max_iters=100_000, until_time=args.duration * 4)
@@ -172,6 +231,10 @@ def main() -> None:
           f"offline {eng.bm.metrics.offline_hit_rate:.3f}")
     print(f"evictions {eng.bm.metrics.evictions}  "
           f"punished tokens {eng.bm.metrics.punished_tokens}")
+    if eng.calibrator is not None:
+        print(f"calibration: refits {eng.calibrator.refits}  "
+              f"mean rel err (last 100 iters) "
+              f"{eng.calibrator.mean_rel_err(100):.3f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,178 @@
+"""§5 calibration loop: ground-truth clock vs. estimate split, perturbed
+clocks, drift-triggered refits, convergence, and heterogeneous fleets."""
+import numpy as np
+
+from repro.core import (ECHO, ECHO_C, SLO, EchoEngine, OnlineCalibrator,
+                        PerturbedTimeModel, Request, TaskType, TimeModel)
+from repro.data import make_offline_corpus, make_online_requests
+
+
+def _rand_batch(rng):
+    """A plausible iteration shape: chunks mid-context + a decode batch."""
+    spans = []
+    if rng.random() < 0.7:
+        s = int(rng.integers(0, 512))
+        spans.append((s, s + int(rng.integers(16, 128))))
+    lens = [int(x) for x in rng.integers(32, 512, rng.integers(0, 12))]
+    if not spans and not lens:
+        lens = [64]
+    return spans, lens
+
+
+def _feed(cal, truth, n, rng, t0=0.0):
+    t = t0
+    for _ in range(n):
+        spans, lens = _rand_batch(rng)
+        obs = truth.batch_time(spans, lens)
+        t += obs
+        cal.observe(t, spans, lens, obs)
+    return t
+
+
+# ------------------------------------------------------------- presets
+def test_hw_presets_and_perturbation():
+    a, h = TimeModel.a100(), TimeModel.h100()
+    spans, lens = [(0, 256)], [128, 256]
+    assert h.batch_time(spans, lens) < a.batch_time(spans, lens)
+    assert TimeModel.preset("h100").gamma == h.gamma
+
+    p = TimeModel.a100().perturbed(scale=2.0, jitter=0.0, seed=0)
+    assert np.isclose(p.batch_time(spans, lens),
+                      2.0 * a.batch_time(spans, lens))
+    # seeded jitter: deterministic across instances, noisy across calls
+    p1 = TimeModel.a100().perturbed(scale=1.0, jitter=0.1, seed=3)
+    p2 = TimeModel.a100().perturbed(scale=1.0, jitter=0.1, seed=3)
+    seq1 = [p1.batch_time(spans, lens) for _ in range(4)]
+    seq2 = [p2.batch_time(spans, lens) for _ in range(4)]
+    assert seq1 == seq2
+    assert len(set(seq1)) > 1
+
+
+def test_fit_prefill_accepts_span_samples():
+    true = TimeModel(alpha=3e-8, beta=2e-6, c=1e-6)
+    rng = np.random.default_rng(0)
+    samples = []
+    for _ in range(20):
+        s = int(rng.integers(0, 2048))
+        e = s + int(rng.integers(32, 1024))
+        samples.append(((s, e), true.prefill_time([(s, e)])))
+    tm = TimeModel()
+    tm.fit_prefill(samples)
+    for span in ((0, 1000), (500, 700)):
+        want = true.prefill_time([span])
+        assert abs(tm.prefill_time([span]) - want) / want < 0.1
+
+
+# ------------------------------------------------------------- calibrator
+def test_calibrator_converges_on_synthetic_drift():
+    tm = TimeModel.a100()
+    truth = TimeModel.a100().perturbed(scale=2.0, jitter=0.02, seed=1)
+    cal = OnlineCalibrator(tm)
+    _feed(cal, truth, 400, np.random.default_rng(2))
+    assert cal.refits >= 1
+    assert cal.mean_rel_err(100) < 0.1, cal.mean_rel_err(100)
+
+
+def test_no_refit_under_stable_load():
+    tm = TimeModel.a100()
+    cal = OnlineCalibrator(tm)
+    _feed(cal, tm, 300, np.random.default_rng(3))   # truth == estimate
+    assert cal.refits == 0
+    assert cal.mean_rel_err() < 1e-9
+
+
+def test_drift_triggered_refit_after_shift():
+    tm = TimeModel.a100()
+    cal = OnlineCalibrator(tm)
+    rng = np.random.default_rng(4)
+    t = _feed(cal, TimeModel.a100(), 100, rng)      # stable: no refits
+    assert cal.refits == 0
+    truth = TimeModel.a100().perturbed(scale=1.6, jitter=0.01, seed=5)
+    _feed(cal, truth, 400, rng, t0=t)               # hardware drifts
+    assert cal.refits >= 1
+    assert cal.mean_rel_err(100) < 0.1
+
+
+# ------------------------------------------------------------- engine
+def test_engine_clock_defaults_to_estimate():
+    eng = EchoEngine(None, None, ECHO, num_blocks=64)
+    assert eng.clock_model is eng.tm
+    assert eng.calibrator is None
+
+
+def test_engine_calibrates_against_perturbed_clock():
+    tm = TimeModel.a100()
+    clock = TimeModel.a100().perturbed(scale=2.0, jitter=0.02, seed=7)
+    eng = EchoEngine(None, None, ECHO_C, num_blocks=256, block_size=16,
+                     chunk_size=64, time_model=tm, clock_model=clock,
+                     max_running=48)
+    online = make_online_requests(list(np.linspace(0.1, 30.0, 40)),
+                                  prompt_mean=120, prompt_std=30,
+                                  max_new_mean=16, slo=SLO(1.0, 0.1), seed=8)
+    offline = make_offline_corpus(6, 48, doc_len=256, question_len=24,
+                                  max_new=12, seed=9)
+    for r in online + offline:
+        eng.submit(r)
+    eng.run(max_iters=20_000, until_time=200.0)
+    cal = eng.calibrator
+    assert cal is not None and cal.refits >= 1
+    assert cal.mean_rel_err(100) < 0.15, cal.mean_rel_err(100)
+    # the estimate moved off the stock preset toward the 2x truth
+    assert eng.tm.gamma != TimeModel.a100().gamma
+
+
+def test_perfect_clock_run_unchanged_by_calibration_flag():
+    """With clock == estimate the calibrated engine must schedule exactly
+    like the plain one (no refits fire, predictions already perfect)."""
+    def run(policy):
+        eng = EchoEngine(None, None, policy, num_blocks=128, block_size=16,
+                         chunk_size=32, time_model=TimeModel.a100())
+        for r in make_offline_corpus(3, 8, doc_len=96, question_len=16,
+                                     max_new=8, seed=11):
+            eng.submit(r)
+        return eng.run(max_iters=5000)
+
+    a, b = run(ECHO), run(ECHO_C)
+    assert [r.t for r in a.iterations] == [r.t for r in b.iterations]
+
+
+# ------------------------------------------------------------- cluster
+def test_heterogeneous_cluster_calibrates_per_replica():
+    from repro.cluster import ClusterSimulator
+    from repro.core.simulator import clone_requests
+    from repro.data import default_tenants, make_multi_tenant_workload
+
+    online, offline = make_multi_tenant_workload(default_tenants(2), 12.0,
+                                                 seed=5)
+    clocks = [TimeModel.a100().perturbed(scale=2.0, jitter=0.02, seed=3),
+              TimeModel.h100()]
+    sim = ClusterSimulator(2, ECHO_C, num_blocks=96,
+                           time_model=TimeModel.a100(),
+                           clock_models=clocks, seed=0)
+    sim.submit_all(clone_requests(online) + clone_requests(offline))
+    sim.run(until_time=60.0)
+    tms = [rep.engine.tm for rep in sim.replicas]
+    assert tms[0] is not tms[1]            # per-replica estimate copies
+    for rep in sim.replicas:
+        cal = rep.engine.calibrator
+        assert cal is not None and cal.refits >= 1
+        # short run (~200 iters on the slow replica): judge the trailing 50
+        assert cal.mean_rel_err(50) < 0.15
+    # each replica learned *its own* hardware: the 2x-a100 replica's decode
+    # coefficient ends far above the h100 replica's
+    assert tms[0].gamma > 2 * tms[1].gamma
+
+
+def test_fleet_planner_mixed_hardware():
+    from repro.cluster import FleetPlanner
+    from repro.data import default_tenants, make_multi_tenant_workload
+
+    online, offline = make_multi_tenant_workload(default_tenants(2), 8.0,
+                                                 seed=6)
+    planner = FleetPlanner(TimeModel.a100(), policy=ECHO_C,
+                           clock_models=[TimeModel.a100().perturbed(
+                               scale=1.5, seed=2), TimeModel.h100()])
+    rep = planner.plan(online, offline, candidate_replicas=(1, 2),
+                       candidate_blocks=(96,), duration=20.0)
+    assert rep.slo_by_config                 # probed at least one config
+    assert rep.min_replicas in (1, 2, None)

@@ -113,6 +113,39 @@ def test_all_policies_complete(engine_model, policy):
     assert all(r.done for r in stats.finished)
 
 
+def test_slo_attainment_excludes_undecidable():
+    """Regression: a request whose metric is undefined (tpot with <2 output
+    tokens; ttft with no first token) must be excluded from the denominator
+    in BOTH branches — tpot used to count it as attained while ttft counted
+    it as a miss."""
+    from repro.core import EngineStats
+
+    def _req(n_out, slow=False):
+        r = Request(prompt=(1, 2, 3), max_new_tokens=max(n_out, 1),
+                    task_type=TaskType.ONLINE, arrival_time=0.0,
+                    slo=SLO(ttft=1.0, tpot=0.1))
+        step = 1.0 if slow else 0.05
+        for i in range(n_out):
+            r.record_token(7, 0.5 + i * step)
+        return r
+
+    stats = EngineStats()
+    stats.finished = [_req(4), _req(4, slow=True), _req(1)]  # hit, miss, n/a
+    assert stats.slo_attainment("tpot") == 0.5   # 1 of 2 decidable
+    assert stats.slo_attainment("ttft") == 1.0   # all 3 decidable, all hit
+
+    # undecidable ttft (never emitted): excluded, not a miss
+    ghost = Request(prompt=(1,), max_new_tokens=1, task_type=TaskType.ONLINE,
+                    arrival_time=0.0, slo=SLO(1.0, 0.1))
+    stats.finished.append(ghost)
+    assert stats.slo_attainment("ttft") == 1.0
+
+    # all-undecidable: vacuous attainment, not a division crash
+    only = EngineStats()
+    only.finished = [_req(1)]
+    assert only.slo_attainment("tpot") == 1.0
+
+
 def test_simulator_mode_runs_and_orders():
     tm = TimeModel(alpha=2e-7, beta=1e-4, c=2e-3, gamma=3e-5, delta=3e-5,
                    d0=2e-3, lam=0.9)

@@ -77,6 +77,29 @@ def test_rate_predictor_tracks_rate():
     assert 4.0 < pred < 8.0                   # >= mean, includes +sigma
 
 
+def test_rate_predictor_not_diluted_during_warmup():
+    """Regression: with observed history much shorter than the window, the
+    predictor must bin only over elapsed time — previously the empty
+    cold-start bins diluted the rate ~window/elapsed-fold."""
+    rp = RatePredictor(window=900.0)
+    t = 0.0
+    rng = np.random.default_rng(4)
+    while t < 120:                            # 120s of 5/s arrivals
+        t += rng.exponential(1 / 5.0)
+        rp.observe(t)
+    pred = rp.predict_rate(120.0)
+    assert pred >= 4.0, pred                  # was ~0.7 with full-window bins
+
+
+def test_rate_predictor_single_bin_warmup():
+    """Under one bin of history: single-bin mean, no absurd explosion."""
+    rp = RatePredictor(window=900.0)
+    for t in (0.0, 10.0, 20.0, 30.0):
+        rp.observe(t)
+    pred = rp.predict_rate(30.0, bin_s=60.0)
+    assert 0.1 < pred < 1.0                   # ~4 arrivals / 30s
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.lists(st.integers(1, 4096), min_size=1, max_size=8),
        st.lists(st.integers(1, 4096), min_size=0, max_size=8))

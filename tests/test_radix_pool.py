@@ -44,6 +44,27 @@ def test_candidates_one_per_group():
     assert groups == {doc_a, doc_b}
 
 
+def test_candidates_fcfs_within_group_after_readd():
+    """Group heads follow (arrival_time, rid) like fcfs_head — re-adding a
+    preempted request at the tail of the OrderedDict must not demote it."""
+    pool = OfflinePool(block_size=4)
+    doc = (1,) * 4
+    early = _off(doc + (10,) * 4, t=0.0)
+    late = _off(doc + (20,) * 4, t=5.0)
+    pool.add(early)
+    pool.remove(early)              # admitted
+    pool.add(late)
+    pool.add(early)                 # preempted: back at insertion tail
+    cands = list(pool.candidates())
+    assert cands == [early]         # one head per group, earliest arrival
+
+    # across groups, heads are yielded in FCFS order too
+    other = _off((2,) * 8, t=1.0)
+    pool.add(other)
+    cands = list(pool.candidates())
+    assert cands == [early, other]
+
+
 def test_fcfs_head_earliest():
     pool = OfflinePool(block_size=4)
     r_late = _off((1,) * 8, t=5.0)

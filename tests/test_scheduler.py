@@ -83,6 +83,64 @@ def test_slo_sheds_offline_work():
     assert on in plan.decodes
 
 
+def test_slo_shed_rolls_back_chunk_allocation():
+    """Regression: shedding an offline prefill must release the chunk's
+    freshly allocated blocks back to the computed-token boundary —
+    otherwise the shed request keeps holding memory for work it will not
+    do this iteration, starving same-iteration admission."""
+    tm = TimeModel(alpha=0, beta=0.08, c=1e-4, gamma=1e-4, delta=1e-4,
+                   d0=1e-4, lam=1.0)           # prefill chunk of 8 = 0.64s
+    s = _sched(policy=ECHO, tm=tm)
+    on = _online(4, t=0.0, slo=SLO(ttft=1.0, tpot=0.05))
+    s.submit(on)
+    plan = s.schedule(0.0)                     # online prefill alone
+    for r, c in plan.prefills:
+        r.computed_tokens += c
+        s.bm.commit(r, r.full_tokens, 0.0)
+    on.record_token(1, 0.05)                   # next deadline: 1.05s
+    off = _offline(range(100, 132))
+    s.submit(off)
+    plan = s.schedule(0.2)                     # loose budget: admitted
+    assert any(r is off for r, _ in plan.prefills)
+    for r, c in plan.prefills:
+        r.computed_tokens += c
+        s.bm.commit(r, r.full_tokens, 0.2)
+    assert off.computed_tokens == 8
+    free_before = s.bm.free_blocks
+    held_before = len(off.block_ids)
+    plan = s.schedule(0.9)                     # 0.135s budget << 0.64s chunk
+    # the offline continuation chunk is shed...
+    assert not any(r is off for r, _ in plan.prefills)
+    assert on in plan.decodes
+    # ...and its freshly allocated blocks are rolled back
+    bs = s.bm.block_size
+    want_blocks = (off.computed_tokens + bs - 1) // bs
+    assert len(off.block_ids) == want_blocks, \
+        "shed chunk's blocks must be rolled back to the computed boundary"
+    assert len(off.block_ids) == held_before
+    assert s.bm.free_blocks >= free_before
+
+
+def test_preempted_offline_keeps_fcfs_priority():
+    """Regression: a preempted offline request re-enters the pool at the
+    tail of its bucket's OrderedDict, but candidate selection must still
+    honour (arrival_time, rid) — repeated preemption must not starve it
+    behind newer arrivals."""
+    s = _sched(policy=ECHO, num_blocks=64, chunk=8)
+    old = _offline(tuple(range(100, 116)), t=0.0)
+    s.pool.add(old)
+    s.pool.remove(old)                         # admitted...
+    newer = _offline(tuple(range(200, 216)), t=1.0)
+    s.pool.add(newer)
+    s.pool.add(old)                            # ...then preempted: re-added
+    cands = list(s.pool.candidates())
+    assert cands[0] is old, \
+        "pool candidates must respect arrival order, not re-add order"
+    plan = s.schedule(2.0)
+    first_off = [r for r, _ in plan.prefills if r.task_type == TaskType.OFFLINE]
+    assert first_off and first_off[0] is old
+
+
 def test_kv_aware_prefers_cached_candidate():
     s = _sched(policy=ECHO, num_blocks=64, chunk=8)
     doc = tuple(range(16))
