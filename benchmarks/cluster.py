@@ -17,6 +17,7 @@ from repro.cluster import ClusterSimulator, FleetPlanner
 from repro.core import ECHO
 from repro.core.simulator import clone_requests
 from repro.data import default_tenants, make_multi_tenant_workload
+from repro.serving import EchoService
 
 DURATION = 30.0
 NUM_BLOCKS = 128          # per replica; fleet working set >> one cache
@@ -41,8 +42,9 @@ def _peak_workload():
 def _run(n_replicas, router_policy, online, offline, tm):
     sim = ClusterSimulator(n_replicas, ECHO, router_policy=router_policy,
                            num_blocks=NUM_BLOCKS, time_model=tm, seed=0)
-    sim.submit_all(clone_requests(online) + clone_requests(offline))
-    return sim.run(until_time=DURATION * 4)
+    service = EchoService(sim)
+    return service.drive(clone_requests(online) + clone_requests(offline),
+                         until_time=DURATION * 4)
 
 
 def rows():

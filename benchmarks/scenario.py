@@ -6,6 +6,7 @@ from __future__ import annotations
 
 from repro.core import SLO, EchoEngine, PolicyConfig, TimeModel
 from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
+from repro.serving import EchoService
 
 # LooGLE-like regime (§7.1): the offline prefix working set (10 docs x 20
 # blocks = 200) fits the 256-block cache, but online bursts flush it under
@@ -25,8 +26,8 @@ def time_model(**kw) -> TimeModel:
     return TimeModel.a100(**kw)
 
 
-def build_engine(policy: PolicyConfig, seed: int = 0, tm_kw=None,
-                 clock_model=None, **overrides):
+def build_scenario(seed: int = 0, tm_kw=None, **overrides):
+    """Workload + parameters of the shared §7.1 scenario."""
     p = dict(DEFAULTS)
     p.update(overrides)
     tm = time_model(**(tm_kw or {}))
@@ -43,10 +44,38 @@ def build_engine(policy: PolicyConfig, seed: int = 0, tm_kw=None,
                                   doc_len=p["doc_len"],
                                   question_len=p["question_len"],
                                   max_new=p["offline_new"], seed=seed + 30)
-    eng = EchoEngine(None, None, policy, num_blocks=p["num_blocks"],
-                     block_size=p["block_size"], chunk_size=p["chunk_size"],
-                     time_model=tm, clock_model=clock_model,
-                     max_running=p["max_running"])
+    return tm, online, offline, p
+
+
+def _make_engine(policy, tm, p, clock_model):
+    return EchoEngine(None, None, policy, num_blocks=p["num_blocks"],
+                      block_size=p["block_size"], chunk_size=p["chunk_size"],
+                      time_model=tm, clock_model=clock_model,
+                      max_running=p["max_running"])
+
+
+def build_service(policy: PolicyConfig, seed: int = 0, tm_kw=None,
+                  clock_model=None, admission=None, **overrides):
+    """The scenario behind the one serving API: an ``EchoService`` over a
+    virtual-clock engine with the workload already registered (handles and
+    events live on the service). With ``admission=None`` ``service.drive``
+    delegates to the legacy run loop, keeping the exact trace numbers."""
+    tm, online, offline, p = build_scenario(seed=seed, tm_kw=tm_kw,
+                                            **overrides)
+    service = EchoService(_make_engine(policy, tm, p, clock_model),
+                          admission=admission)
+    for r in online + offline:
+        service.submit_request(r)
+    return service, online, offline, p
+
+
+def build_engine(policy: PolicyConfig, seed: int = 0, tm_kw=None,
+                 clock_model=None, **overrides):
+    """Legacy entry point: a bare engine with the workload pre-submitted —
+    no serving layer attached, so ``eng.run()`` callers retain nothing."""
+    tm, online, offline, p = build_scenario(seed=seed, tm_kw=tm_kw,
+                                            **overrides)
+    eng = _make_engine(policy, tm, p, clock_model)
     for r in online + offline:
         eng.submit(r)
     return eng, online, offline, p

@@ -12,6 +12,7 @@ decisions are priced correctly again.
 from repro.core import (ECHO, ECHO_C, SLO, EchoEngine, OnlineCalibrator,
                         TimeModel)
 from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
+from repro.serving import EchoService
 
 
 def build(policy):
@@ -27,16 +28,15 @@ def build(policy):
                                   slo=SLO(0.6, 0.05), seed=20)
     offline = make_offline_corpus(10, 96, doc_len=320, question_len=32,
                                   max_new=16, seed=30)
-    for r in online + offline:
-        eng.submit(r)
-    return eng
+    return eng, online + offline
 
 
 for name, policy in (("static (Echo)", ECHO), ("calibrated (Echo+C)", ECHO_C)):
-    eng = build(policy)
+    eng, workload = build(policy)
     if eng.calibrator is None:        # measure error without refitting
         eng.calibrator = OnlineCalibrator.passive(eng.tm)
-    stats = eng.run(max_iters=60_000, until_time=360.0)
+    stats = EchoService(eng).drive(workload, max_iters=60_000,
+                                   until_time=360.0)
     cal = eng.calibrator
     print(f"[{name}]")
     print(f"  estimate error: start "

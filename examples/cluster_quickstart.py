@@ -1,5 +1,6 @@
 """Cluster quickstart: co-serve two tenants across 2 replicas and compare
-the prefix-affinity router against round-robin dispatch.
+the prefix-affinity router against round-robin dispatch — the same
+EchoService facade as the single-engine quickstart, routing hidden behind it.
 
     PYTHONPATH=src python examples/cluster_quickstart.py
 """
@@ -7,6 +8,7 @@ from repro.cluster import ClusterSimulator
 from repro.core import ECHO, TimeModel
 from repro.core.simulator import clone_requests
 from repro.data import TenantSpec, make_multi_tenant_workload
+from repro.serving import EchoService
 
 tm = TimeModel.a100()
 
@@ -19,8 +21,9 @@ online, offline = make_multi_tenant_workload(tenants, duration=15.0, seed=0)
 for policy in ("affinity", "round_robin"):
     sim = ClusterSimulator(2, ECHO, router_policy=policy, num_blocks=96,
                            time_model=tm, seed=0)
-    sim.submit_all(clone_requests(online) + clone_requests(offline))
-    stats = sim.run(until_time=60.0)
+    service = EchoService(sim)
+    stats = service.drive(clone_requests(online) + clone_requests(offline),
+                          until_time=60.0)
     on, off = stats.finished_counts()
     print(f"[{policy:>11}] online {on}/{len(online)}  "
           f"offline {off}/{len(offline)}  "

@@ -1,12 +1,14 @@
-"""Quickstart: serve a tiny model with Echo, co-scheduling online + offline.
+"""Quickstart: serve a tiny model through the EchoService API —
+co-scheduling online + offline, streaming the online tokens live.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
 from repro.configs import get_config
-from repro.core import ECHO, SLO, EchoEngine, Request, TaskType, TimeModel
+from repro.core import ECHO, SLO, EchoEngine, TimeModel
 from repro.models import Model
+from repro.serving import EchoService
 
 cfg = get_config("qwen3-4b").reduced()          # 2 layers, CPU-runnable
 model = Model(cfg)
@@ -16,24 +18,26 @@ engine = EchoEngine(model, params, ECHO, num_blocks=128, block_size=16,
                     chunk_size=32, max_pages_per_seq=16,
                     time_model=TimeModel(alpha=2e-7, beta=1e-4, c=2e-3,
                                          gamma=3e-5, delta=3e-5, d0=2e-3))
+service = EchoService(engine)
 
 # one latency-sensitive online request ...
-online = Request(prompt=tuple(range(100, 140)), max_new_tokens=8,
-                 task_type=TaskType.ONLINE, arrival_time=0.0, slo=SLO(1.0, 0.1))
+online = service.submit(tuple(range(100, 140)), task_type="online",
+                        max_new_tokens=8, slo=SLO(1.0, 0.1), arrival_time=0.0)
 # ... and an offline batch sharing a document prefix
 doc = tuple(range(200, 296))
-offline = [Request(prompt=doc + tuple(range(300 + 10 * i, 308 + 10 * i)),
-                   max_new_tokens=8, task_type=TaskType.OFFLINE)
+offline = [service.submit(doc + tuple(range(300 + 10 * i, 308 + 10 * i)),
+                          task_type="offline", max_new_tokens=8)
            for i in range(4)]
 
-engine.submit(online)
-for r in offline:
-    engine.submit(r)
-stats = engine.run(max_iters=2000)
+# stream the online answer: each iteration of tokens() drives the service
+# until the next token lands, interleaved with the offline batch
+for ev in online.tokens():
+    print(f"online token[{ev.index}] = {ev.token}  (t={ev.t:.3f}s)")
+print(f"online TTFT {online.ttft():.3f}s  status {online.status.value}")
 
-print(f"online tokens : {online.output_tokens}  (TTFT {online.ttft():.3f}s)")
-for i, r in enumerate(offline):
-    print(f"offline[{i}]    : {r.output_tokens}")
+stats = service.run()                           # drain the offline work
+for i, h in enumerate(offline):
+    print(f"offline[{i}]    : {h.result().tokens}")
 print(f"offline throughput : {stats.offline_throughput():.1f} tok/s (virtual)")
 print(f"prefix cache hit   : {engine.bm.metrics.offline_hit_rate:.2%} "
       f"(doc prefix reused across the batch)")

@@ -1,6 +1,7 @@
 """End-to-end co-serving driver: a real (reduced) model served for hundreds
 of engine iterations against a bursty online trace + LooGLE-like offline
-batch, comparing Echo against the vLLM-style baseline.
+batch, comparing Echo against the vLLM-style baseline — driven through the
+EchoService facade with event-bus live metrics instead of post-hoc scraping.
 
     PYTHONPATH=src python examples/serve_online_offline.py [--arch qwen3-4b]
 """
@@ -12,6 +13,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.core import BS, ECHO, SLO, EchoEngine, TimeModel
 from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
 from repro.models import Model
+from repro.serving import EchoService
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b")
@@ -35,13 +37,16 @@ for policy in (BS, ECHO):
                                   vocab=cfg.vocab_size, seed=3)
     eng = EchoEngine(model, params, policy, num_blocks=160, block_size=16,
                      chunk_size=32, max_pages_per_seq=16, time_model=tm)
-    for r in online + offline:
-        eng.submit(r)
-    stats = eng.run(max_iters=20_000, until_time=4 * args.duration)
+    service = EchoService(eng)
+    stats = service.drive(online + offline, max_iters=20_000,
+                          until_time=4 * args.duration)
+    live = service.live                  # accumulated from on_token/on_finish
     print(f"--- {policy.name} ---")
     print(f"  iterations         : {len(stats.iterations)}")
     print(f"  offline throughput : {stats.offline_throughput():.1f} tok/s (virtual)")
-    print(f"  SLO attainment     : TTFT {stats.slo_attainment('ttft'):.3f} "
-          f"TPOT {stats.slo_attainment('tpot'):.3f}")
+    print(f"  SLO attainment     : TTFT {live.slo_attainment('ttft'):.3f} "
+          f"TPOT {live.slo_attainment('tpot'):.3f}  (live, event-driven)")
+    print(f"  preemptions seen   : {live.preemptions}  "
+          f"first tokens {live.first_tokens}")
     print(f"  offline hit rate   : {eng.bm.metrics.offline_hit_rate:.3f}")
     print(f"  punished tokens    : {eng.bm.metrics.punished_tokens}")

@@ -73,22 +73,15 @@ class Replica:
         self.stalls = 0            # new work can unblock a drained replica
 
     # ------------------------------------------------------------- signals
+    # (accounting lives on the engine — shared with serving backends)
     def has_work(self) -> bool:
-        eng = self.engine
-        return bool(eng.pending or eng.scheduler.online_queue
-                    or eng.scheduler.running or len(eng.pool))
+        return self.engine.has_work()
 
     def online_queue_depth(self) -> int:
-        n = len(self.engine.scheduler.online_queue)
-        n += sum(1 for r in self.engine.pending if r.is_online)
-        return n
+        return self.engine.online_queue_depth()
 
     def offline_backlog(self) -> int:
-        eng = self.engine
-        n = len(eng.pool)
-        n += sum(1 for r in eng.pending if not r.is_online)
-        n += sum(1 for r in eng.scheduler.running if not r.is_online)
-        return n
+        return self.engine.offline_backlog()
 
     def threshold_headroom(self) -> int:
         bm = self.engine.bm
@@ -117,27 +110,12 @@ class Replica:
         return n
 
     def predicted_added_latency(self, req: Request) -> float:
-        """Replica-local time to this request's first token if placed here:
-        its own prefill plus all online prefill work ahead of it, overlapped
-        with the running decode batch (Eq.6-8), plus any clock skew (a
-        replica whose virtual clock is already past the arrival cannot start
-        it earlier than its own `now`). Uses this replica's own — possibly
-        online-calibrated — estimate model, so a slower (or drifted) replica
-        correctly reports longer predicted latency to the router."""
-        sched = self.engine.scheduler
-        spans = [(0, len(req.prompt))]
-        for r in sched.online_queue:
-            spans.append((0, len(r.full_tokens)))
-        for r in self.engine.pending:
-            if r.is_online:
-                spans.append((0, len(r.full_tokens)))
-        for r in sched.running:
-            if r.is_online and not r.prefill_done:
-                spans.append((r.computed_tokens, r.prefill_target_len))
-        dlens = [r.total_len + 1 for r in sched.running
-                 if r.prefill_done and not r.done]
-        t = self.engine.tm.batch_time(spans, dlens)
-        return t + max(self.engine.now - req.arrival_time, 0.0)
+        """Replica-local time to this request's first token if placed here
+        (see ``EchoEngine.predicted_first_token_latency``). Uses this
+        replica's own — possibly online-calibrated — estimate model, so a
+        slower (or drifted) replica correctly reports longer predicted
+        latency to the router."""
+        return self.engine.predicted_first_token_latency(req)
 
     def load(self) -> ReplicaLoad:
         sched = self.engine.scheduler

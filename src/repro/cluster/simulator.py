@@ -18,12 +18,10 @@ from typing import List, Optional, Sequence, Tuple
 
 from repro.cluster.replica import Replica
 from repro.cluster.router import Router, RouterStats
-from repro.core.engine import EngineStats
+from repro.core.engine import MAX_STALLS, EngineStats
 from repro.core.estimator import PerturbedTimeModel, TimeModel
 from repro.core.policies import ECHO, PolicyConfig
-from repro.core.request import Request
-
-_MAX_STALLS = 3       # mirrors EchoEngine.run's deadlock guard
+from repro.core.request import Request, RequestState
 
 
 @dataclass
@@ -31,6 +29,7 @@ class ClusterStats:
     """Fleet-wide aggregate over per-replica EngineStats."""
     replicas: List[EngineStats] = field(default_factory=list)
     router: RouterStats = field(default_factory=RouterStats)
+    aborted_undispatched: List[Request] = field(default_factory=list)
     _merged: Optional[EngineStats] = field(default=None, init=False,
                                            repr=False, compare=False)
 
@@ -40,6 +39,8 @@ class ClusterStats:
             for st in self.replicas:
                 m.iterations.extend(st.iterations)
                 m.finished.extend(st.finished)
+                m.aborted.extend(st.aborted)
+            m.aborted.extend(self.aborted_undispatched)
             m.iterations.sort(key=lambda rec: rec.t)
             self._merged = m
         return self._merged
@@ -106,6 +107,7 @@ class ClusterSimulator:
                              steal_batch=steal_batch)
         self.rebalance_every = rebalance_every
         self._pending: List[Tuple[float, int, Request]] = []   # arrival heap
+        self.aborted_undispatched: List[Request] = []
         self._steps = 0
 
     # ------------------------------------------------------------- intake
@@ -119,37 +121,61 @@ class ClusterSimulator:
     # ------------------------------------------------------------- loop
     def _busy(self) -> List[Replica]:
         return [r for r in self.replicas
-                if r.has_work() and r.stalls <= _MAX_STALLS]
+                if r.has_work() and r.stalls <= MAX_STALLS]
+
+    def step_event(self, until_time: Optional[float] = None) -> bool:
+        """Advance the cluster by ONE event — dispatch the earliest pending
+        arrival or step the busy replica with the smallest virtual clock.
+        Returns False when nothing is left to do (or the next event lies past
+        ``until_time``). ``run`` is a loop over this; the serving facade uses
+        it as the cluster's low-level stepping primitive."""
+        busy = self._busy()
+        t_arr = self._pending[0][0] if self._pending else None
+        if not busy and t_arr is None:
+            return False
+        t_busy = min((r.engine.now for r in busy), default=float("inf"))
+        t_next = min(t_busy, t_arr) if t_arr is not None else t_busy
+        if until_time is not None and t_next >= until_time:
+            return False
+        if t_arr is not None and t_arr <= t_busy:
+            _, _, req = heapq.heappop(self._pending)
+            self.router.dispatch(req)
+            return True
+        rep = min(busy, key=lambda r: (r.engine.now, r.id))
+        before = rep.engine.now
+        rec = rep.engine.step()
+        if rec is None and not rep.engine.pending \
+                and rep.engine.now <= before:
+            rep.stalls += 1             # unschedulable backlog: back off
+        else:
+            rep.stalls = 0
+        self._steps += 1
+        if self._steps % self.rebalance_every == 0:
+            self.router.rebalance()
+        return True
+
+    def abort(self, req: Request) -> bool:
+        """Cancel a request wherever it lives: still undispatched in the
+        arrival heap, or inside whichever replica the router placed it on."""
+        for i, (_, _, r) in enumerate(self._pending):
+            if r is req:
+                self._pending.pop(i)
+                heapq.heapify(self._pending)
+                req.state = RequestState.ABORTED
+                self.aborted_undispatched.append(req)
+                return True
+        return any(rep.engine.abort(req) for rep in self.replicas)
 
     def run(self, max_iters: int = 200_000,
             until_time: Optional[float] = None) -> ClusterStats:
         for _ in range(max_iters):
-            busy = self._busy()
-            t_arr = self._pending[0][0] if self._pending else None
-            if not busy and t_arr is None:
+            if not self.step_event(until_time):
                 break
-            t_busy = min((r.engine.now for r in busy), default=float("inf"))
-            t_next = min(t_busy, t_arr) if t_arr is not None else t_busy
-            if until_time is not None and t_next >= until_time:
-                break
-            if t_arr is not None and t_arr <= t_busy:
-                _, _, req = heapq.heappop(self._pending)
-                self.router.dispatch(req)
-                continue
-            rep = min(busy, key=lambda r: (r.engine.now, r.id))
-            before = rep.engine.now
-            rec = rep.engine.step()
-            if rec is None and not rep.engine.pending \
-                    and rep.engine.now <= before:
-                rep.stalls += 1         # unschedulable backlog: back off
-            else:
-                rep.stalls = 0
-            self._steps += 1
-            if self._steps % self.rebalance_every == 0:
-                self.router.rebalance()
         return self.stats()
 
     # ------------------------------------------------------------- results
     def stats(self) -> ClusterStats:
         return ClusterStats(replicas=[r.engine.stats for r in self.replicas],
-                            router=self.router.stats)
+                            router=self.router.stats,
+                            aborted_undispatched=list(
+                                self.aborted_undispatched))

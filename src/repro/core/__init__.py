@@ -1,7 +1,7 @@
 """Echo's primary contribution: scheduler + KV manager + estimators."""
 from repro.core.block_manager import BlockManager
 from repro.core.calibration import CalibrationSample, OnlineCalibrator
-from repro.core.engine import EchoEngine, EngineStats
+from repro.core.engine import EchoEngine, EngineListener, EngineStats
 from repro.core.estimator import (MemoryPredictor, PerturbedTimeModel,
                                   RatePredictor, TimeModel)
 from repro.core.policies import (ALL_POLICIES, BS, BS_E, BS_E_S, ECHO,
@@ -12,7 +12,8 @@ from repro.core.scheduler import Plan, Scheduler
 
 __all__ = [
     "ALL_POLICIES", "BS", "BS_E", "BS_E_S", "ECHO", "ECHO_C",
-    "BlockManager", "CalibrationSample", "EchoEngine", "EngineStats",
+    "BlockManager", "CalibrationSample", "EchoEngine", "EngineListener",
+    "EngineStats",
     "MemoryPredictor", "OfflinePool", "OnlineCalibrator",
     "PerturbedTimeModel", "Plan", "PolicyConfig", "RatePredictor", "Request",
     "RequestState", "SLO", "Scheduler", "TaskType", "TimeModel",

@@ -12,6 +12,7 @@ to refit the estimate from the observed iteration times (§5).
 """
 from __future__ import annotations
 
+import bisect
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
@@ -27,6 +28,8 @@ from repro.core.request import Request, RequestState, TaskType
 from repro.core.scheduler import Plan, Scheduler
 from repro.models.model import Model
 from repro.models.paged import PagedRunner
+
+MAX_STALLS = 3      # consecutive no-progress iterations before giving up
 
 
 @dataclass
@@ -44,10 +47,28 @@ class IterationRecord:
     threshold_blocks: int = 0
 
 
+class EngineListener:
+    """Engine-level lifecycle hooks, called synchronously from ``step()``.
+
+    The serving layer (``repro.serving``) subscribes one of these per engine
+    to stream token/preempt/finish events live instead of scraping
+    ``EngineStats`` after the fact. All methods are no-ops by default so a
+    listener overrides only what it needs. Callbacks run at iteration end
+    (after the plan executed), so aborting requests from inside one is safe.
+    """
+
+    def on_token(self, req: Request, tok: int, t: float) -> None: ...
+
+    def on_preempt(self, req: Request, t: float) -> None: ...
+
+    def on_finish(self, req: Request, t: float) -> None: ...
+
+
 @dataclass
 class EngineStats:
     iterations: List[IterationRecord] = field(default_factory=list)
     finished: List[Request] = field(default_factory=list)
+    aborted: List[Request] = field(default_factory=list)
 
     def offline_throughput(self) -> float:
         """Completed offline work (prompt + generated tokens of finished
@@ -133,17 +154,57 @@ class EchoEngine:
         self.mem_pred = MemoryPredictor(window=120.0)
         self.now = 0.0
         self.stats = EngineStats()
-        self.pending: List[Request] = []       # arrival-time ordered
+        self.pending: List[Request] = []       # (arrival_time, rid) ordered
+        self.listeners: List[EngineListener] = []
         self._rng = np.random.default_rng(seed)
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
-        self.pending.append(req)
-        self.pending.sort(key=lambda r: r.arrival_time)
+        bisect.insort(self.pending, req,
+                      key=lambda r: (r.arrival_time, r.rid))
 
     def _pull_arrivals(self) -> None:
+        prev = -float("inf")
         while self.pending and self.pending[0].arrival_time <= self.now:
-            self.scheduler.submit(self.pending.pop(0))
+            req = self.pending.pop(0)
+            assert req.arrival_time >= prev, "pending drained out of order"
+            prev = req.arrival_time
+            self.scheduler.submit(req)
+
+    def abort(self, req: Request) -> bool:
+        """Cancel a request mid-flight: remove it from every intake and
+        scheduler structure it sits in and release all its resources — KV
+        blocks (``finished=True``: an aborted owner never returns, so no
+        unfinished-owner pins), radix-pool membership (dropping its RC
+        contribution), and any live runner state. Returns False for
+        already-terminal requests, True otherwise. Safe to call between
+        iterations or from an ``EngineListener`` callback."""
+        if req.state in (RequestState.FINISHED, RequestState.ABORTED):
+            return False
+        found = False
+        if req in self.pending:
+            self.pending.remove(req)
+            found = True
+        sched = self.scheduler
+        if req in sched.online_queue:
+            sched.online_queue.remove(req)
+            found = True
+        if req in self.pool:
+            self.pool.remove(req)
+            found = True
+        if req in sched.running:
+            sched.running.remove(req)
+            found = True
+        if req.block_ids:
+            self.bm.free_request(req, self.now, finished=True)
+            found = True
+        if not found:
+            return False            # not this engine's request
+        if self.runner is not None:
+            self.runner.release(req.rid)
+        req.state = RequestState.ABORTED
+        self.stats.aborted.append(req)
+        return True
 
     # ------------------------------------------------------------- helpers
     def _fabricate(self, req: Request) -> np.ndarray:
@@ -155,8 +216,12 @@ class EchoEngine:
         return out
 
     def _emit(self, req: Request, logits: np.ndarray) -> None:
+        if req.state == RequestState.ABORTED:
+            return          # aborted from a listener callback this iteration
         tok = int(np.argmax(logits))
         req.record_token(tok, self.now)
+        for l in self.listeners:
+            l.on_token(req, tok, self.now)
         if req.done:
             self.bm.free_request(req, self.now, finished=True)
             if req in self.scheduler.running:
@@ -164,9 +229,55 @@ class EchoEngine:
             if self.runner is not None:
                 self.runner.release(req.rid)
             self.stats.finished.append(req)
+            for l in self.listeners:
+                l.on_finish(req, self.now)
+
+    def predicted_first_token_latency(self, req: Request) -> float:
+        """Engine-local time to ``req``'s first token if placed here: its own
+        prefill plus all online prefill work ahead of it, overlapped with the
+        running decode batch (Eq.6-8), plus any clock skew (an engine whose
+        virtual clock is already past the arrival cannot start it earlier
+        than its own ``now``). Uses the scheduler's — possibly
+        online-calibrated — estimate model. Shared by the cluster router's
+        online placement and the serving layer's SLO-feasibility shedding."""
+        sched = self.scheduler
+        spans = [(0, len(req.prompt))]
+        for r in sched.online_queue:
+            spans.append((0, len(r.full_tokens)))
+        for r in self.pending:
+            if r.is_online:
+                spans.append((0, len(r.full_tokens)))
+        for r in sched.running:
+            if r.is_online and not r.prefill_done:
+                spans.append((r.computed_tokens, r.prefill_target_len))
+        dlens = [r.total_len + 1 for r in sched.running
+                 if r.prefill_done and not r.done]
+        t = self.tm.batch_time(spans, dlens)
+        return t + max(self.now - req.arrival_time, 0.0)
 
     def _online_kv_tokens(self) -> int:
         return sum(r.total_len for r in self.scheduler.running if r.is_online)
+
+    # --------------------------------------------------------- load signals
+    # Single source of truth for the accounting shared by cluster replicas
+    # (router placement) and serving backends (admission control).
+    def has_work(self) -> bool:
+        return bool(self.pending or self.scheduler.online_queue
+                    or self.scheduler.running or len(self.pool))
+
+    def online_queue_depth(self) -> int:
+        """Online requests waiting to run: queued at the scheduler or still
+        in the pending intake."""
+        n = len(self.scheduler.online_queue)
+        n += sum(1 for r in self.pending if r.is_online)
+        return n
+
+    def offline_backlog(self) -> int:
+        """Pooled + pending + running offline work."""
+        n = len(self.pool)
+        n += sum(1 for r in self.pending if not r.is_online)
+        n += sum(1 for r in self.scheduler.running if not r.is_online)
+        return n
 
     # ------------------------------------------------------------- step
     def step(self) -> Optional[IterationRecord]:
@@ -239,6 +350,9 @@ class EchoEngine:
             self.calibrator.observe(self.now, spans, dlens, iter_time)
         for req, lg in emissions:               # tokens arrive at iteration end
             self._emit(req, lg)
+        for req in plan.preempted:
+            for l in self.listeners:
+                l.on_preempt(req, self.now)
 
         # ---- estimator feedback + threshold update (§5.3)
         online_kv = self._online_kv_tokens()
@@ -270,13 +384,12 @@ class EchoEngine:
         for _ in range(max_iters):
             if until_time is not None and self.now >= until_time:
                 break
-            if not self.pending and not self.scheduler.online_queue and \
-                    not self.scheduler.running and len(self.pool) == 0:
+            if not self.has_work():
                 break
             rec = self.step()
             if rec is None and not self.pending:
                 stalls += 1
-                if stalls > 3:          # nothing schedulable: deadlock guard
+                if stalls > MAX_STALLS:  # nothing schedulable: deadlock guard
                     break
             else:
                 stalls = 0

@@ -42,6 +42,9 @@ class OfflinePool:
     def __len__(self) -> int:
         return self._size
 
+    def __contains__(self, req: Request) -> bool:
+        return req.rid in self._chains
+
     def bucket_of(self, prompt_len: int) -> int:
         # log2 buckets starting at 256 tokens
         return min(max(int(math.log2(max(prompt_len, 1) / 256)) + 1, 0)

@@ -17,6 +17,7 @@ class RequestState(enum.Enum):
     RUNNING = "running"        # in the active batch (prefilling or decoding)
     PREEMPTED = "preempted"    # evicted mid-flight; will be re-admitted
     FINISHED = "finished"
+    ABORTED = "aborted"        # cancelled mid-flight; resources released
 
 
 @dataclass(frozen=True)

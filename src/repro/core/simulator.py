@@ -21,14 +21,19 @@ from repro.core.policies import ECHO, PolicyConfig
 from repro.core.request import Request
 
 
-def clone_requests(reqs: Sequence[Request]) -> List[Request]:
+def clone_requests(reqs: Sequence[Request],
+                   preserve_rid: bool = False) -> List[Request]:
     """Fresh, unstarted copies — requests mutate as they run, so every
-    simulation must get its own."""
+    simulation must get its own. ``preserve_rid=True`` keeps the template
+    rids, making two simulations of the same workload bit-identical (the
+    simulator fabricates tokens per-rid); only safe when each clone set runs
+    in its own engine/cluster, since rids must stay unique within one."""
     out = []
     for r in reqs:
+        kw = {"rid": r.rid} if preserve_rid else {}
         out.append(Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
                            task_type=r.task_type, arrival_time=r.arrival_time,
-                           slo=r.slo))
+                           slo=r.slo, **kw))
     return out
 
 

@@ -22,6 +22,10 @@ online refitting that closes the gap:
 
   PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
       --hw-profile a100,h100 --hw-drift 2.0 --calibrate
+
+Both paths drive the workload through the one ``EchoService`` facade
+(``repro.serving``); ``--max-online-queue`` / ``--slo-shed-factor`` /
+``--offline-cap`` turn on its admission backpressure.
 """
 from __future__ import annotations
 
@@ -34,8 +38,55 @@ from repro.configs import ARCH_IDS, get_config
 from repro.core import (ALL_POLICIES, ECHO, SLO, EchoEngine, TimeModel)
 from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
 from repro.models import Model
+from repro.serving import AdmissionConfig, EchoService
 
 POLICY_BY_NAME = {p.name: p for p in ALL_POLICIES}
+
+DEFAULT_ARCH = "qwen3-4b"
+
+
+def admission_config(args):
+    """AdmissionConfig from the backpressure flags; None = legacy unbounded."""
+    cfg = AdmissionConfig(max_online_queue=args.max_online_queue,
+                          slo_shed_factor=args.slo_shed_factor,
+                          offline_pool_cap=args.offline_cap)
+    return cfg if cfg.active else None
+
+
+def print_report(service: EchoService, stats, online, offline) -> None:
+    """One reporter for both the single-engine and the cluster path — the
+    metric surface is identical; only the per-engine detail lines vary."""
+    m = stats.merged() if hasattr(stats, "merged") else stats
+    on_done = sum(1 for r in m.finished if r.is_online)
+    off_done = len(m.finished) - on_done
+    print(f"online finished: {on_done}/{len(online)}  "
+          f"offline finished: {off_done}/{len(offline)}")
+    print(f"offline throughput: {stats.offline_throughput():.1f} "
+          f"tok/s (virtual)")
+    print(f"SLO attainment: TTFT {stats.slo_attainment('ttft'):.3f}  "
+          f"TPOT {stats.slo_attainment('tpot'):.3f}")
+    if service.live.shed or service.live.aborted:
+        print(f"admission: shed {service.live.shed}  "
+              f"aborted {service.live.aborted}")
+    router = getattr(stats, "router", None)
+    if router is not None:
+        print(f"router: affinity hits {router.affinity_hits}/"
+              f"{router.offline_dispatched}  "
+              f"stolen {router.stolen_requests}")
+    engines = service.backend.engines()
+    for i, eng in enumerate(engines):
+        tag = f"  replica {i}:" if len(engines) > 1 else "engine:"
+        line = (f"{tag} hit rate {eng.bm.metrics.hit_rate:.3f}  "
+                f"offline hit {eng.bm.metrics.offline_hit_rate:.3f}  "
+                f"evictions {eng.bm.metrics.evictions}  "
+                f"punished tokens {eng.bm.metrics.punished_tokens}  "
+                f"t={eng.now:.1f}s")
+        if router is not None:
+            line += f"  online served {router.per_replica_online.get(i, 0)}"
+        if eng.calibrator is not None:
+            line += (f"  calib: refits {eng.calibrator.refits} "
+                     f"err {eng.calibrator.mean_rel_err(100):.3f}")
+        print(line)
 
 
 def resolve_policy(args):
@@ -126,38 +177,20 @@ def serve_cluster(args) -> None:
                            num_blocks=args.num_blocks,
                            time_model=tm, clock_models=clock_models(args),
                            seed=args.seed)
-    sim.submit_all(online + offline)
-    stats = sim.run(until_time=args.duration * 4)
+    service = EchoService(sim, admission=admission_config(args))
+    stats = service.drive(online + offline, until_time=args.duration * 4)
 
-    on_done, off_done = stats.finished_counts()
     print(f"policy={policy.name} router={args.router} "
           f"replicas={args.replicas}")
-    print(f"online finished: {on_done}/{len(online)}  "
-          f"offline finished: {off_done}/{len(offline)}")
-    print(f"fleet offline throughput: {stats.offline_throughput():.1f} "
-          f"tok/s (virtual)")
-    print(f"SLO attainment: TTFT {stats.slo_attainment('ttft'):.3f}  "
-          f"TPOT {stats.slo_attainment('tpot'):.3f}")
-    print(f"router: affinity hits {stats.router.affinity_hits}/"
-          f"{stats.router.offline_dispatched}  "
-          f"stolen {stats.router.stolen_requests}")
-    for rep, toks in zip(sim.replicas, stats.per_replica_offline_tokens()):
-        line = (f"  replica {rep.id}: offline tokens {toks}  "
-                f"online served {stats.router.per_replica_online.get(rep.id, 0)}  "
-                f"hit rate {rep.engine.bm.metrics.hit_rate:.3f}  "
-                f"t={rep.engine.now:.1f}s")
-        cal = rep.engine.calibrator
-        if cal is not None:
-            line += (f"  calib: refits {cal.refits} "
-                     f"err {cal.mean_rel_err(100):.3f}")
-        print(line)
+    print_report(service, stats, online, offline)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b",
-                    help="model to serve (ignored with --replicas>1: the "
-                         "cluster dry-run is model-free)")
+    ap.add_argument("--arch", choices=ARCH_IDS, default=None,
+                    help=f"model to serve (default {DEFAULT_ARCH}); "
+                         "incompatible with --replicas>1 — the cluster "
+                         "dry-run is model-free")
     ap.add_argument("--policy", choices=list(POLICY_BY_NAME), default="Echo")
     ap.add_argument("--duration", type=float, default=20.0)
     ap.add_argument("--num-blocks", type=int, default=192)
@@ -183,13 +216,26 @@ def main() -> None:
     ap.add_argument("--calibrate", action="store_true",
                     help="refit the scheduler's time model online from the "
                          "observed clock (§5 closed loop)")
+    ap.add_argument("--max-online-queue", type=int, default=None,
+                    help="admission control: bound the online queue; "
+                         "arrivals beyond it are shed")
+    ap.add_argument("--slo-shed-factor", type=float, default=None,
+                    help="admission control: shed an online arrival whose "
+                         "predicted TTFT exceeds this multiple of its SLO")
+    ap.add_argument("--offline-cap", type=int, default=None,
+                    help="admission control: soft cap on the offline "
+                         "backlog; excess work is deferred, not dropped")
     args = ap.parse_args()
 
     if args.replicas > 1:
+        if args.arch is not None:
+            ap.error("--arch is incompatible with --replicas > 1: the "
+                     "cluster dry-run is model-free (drop --arch, or use "
+                     "--replicas 1 to serve a real model)")
         serve_cluster(args)
         return
 
-    cfg = get_config(args.arch).reduced()
+    cfg = get_config(args.arch or DEFAULT_ARCH).reduced()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     policy = resolve_policy(args)
@@ -215,26 +261,11 @@ def main() -> None:
                      block_size=16, chunk_size=64,
                      max_pages_per_seq=32, time_model=tm,
                      clock_model=clocks[0] if clocks else None)
-    for r in online + offline:
-        eng.submit(r)
-    stats = eng.run(max_iters=100_000, until_time=args.duration * 4)
-
-    off_done = sum(1 for r in stats.finished if not r.is_online)
-    on_done = sum(1 for r in stats.finished if r.is_online)
+    service = EchoService(eng, admission=admission_config(args))
+    stats = service.drive(online + offline, max_iters=100_000,
+                          until_time=args.duration * 4)
     print(f"policy={policy.name}")
-    print(f"online finished: {on_done}/{len(online)}  "
-          f"offline finished: {off_done}/{len(offline)}")
-    print(f"offline throughput: {stats.offline_throughput():.1f} tok/s (virtual)")
-    print(f"SLO attainment: TTFT {stats.slo_attainment('ttft'):.3f}  "
-          f"TPOT {stats.slo_attainment('tpot'):.3f}")
-    print(f"prefix cache: overall {eng.bm.metrics.hit_rate:.3f}  "
-          f"offline {eng.bm.metrics.offline_hit_rate:.3f}")
-    print(f"evictions {eng.bm.metrics.evictions}  "
-          f"punished tokens {eng.bm.metrics.punished_tokens}")
-    if eng.calibrator is not None:
-        print(f"calibration: refits {eng.calibrator.refits}  "
-              f"mean rel err (last 100 iters) "
-              f"{eng.calibrator.mean_rel_err(100):.3f}")
+    print_report(service, stats, online, offline)
 
 
 if __name__ == "__main__":

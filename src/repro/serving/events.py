@@ -1,0 +1,136 @@
+"""Service event bus + live metrics.
+
+The bus turns engine-level lifecycle hooks into subscriber callbacks keyed
+by event name — the push-based replacement for scraping ``EngineStats``
+after a run. ``LiveMetrics`` is the canonical subscriber: it maintains the
+paper's headline metrics (SLO attainment, completed offline tokens,
+finished counts) incrementally from events, matching the post-hoc
+``EngineStats`` accounting on the decidable-request rule.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.serving.handle import RequestHandle, TokenEvent
+
+
+class EventBus:
+    """Named-event subscriptions. ``token``/``first_token`` callbacks get a
+    ``TokenEvent``; ``finish``/``preempt``/``abort``/``shed`` callbacks get
+    the ``RequestHandle``. Callbacks run synchronously at iteration end."""
+
+    EVENTS = ("token", "first_token", "finish", "preempt", "abort", "shed")
+
+    def __init__(self):
+        self._subs: Dict[str, List[Callable]] = {e: [] for e in self.EVENTS}
+
+    def subscribe(self, event: str, cb: Callable) -> Callable:
+        if event not in self._subs:
+            raise ValueError(f"unknown event {event!r}; "
+                             f"expected one of {self.EVENTS}")
+        self._subs[event].append(cb)
+        return cb                      # decorator-friendly
+
+    def unsubscribe(self, event: str, cb: Callable) -> None:
+        self._subs[event].remove(cb)
+
+    # convenience decorators / registrars --------------------------------
+    def on_token(self, cb: Callable[[TokenEvent], None]) -> Callable:
+        return self.subscribe("token", cb)
+
+    def on_first_token(self, cb: Callable[[TokenEvent], None]) -> Callable:
+        return self.subscribe("first_token", cb)
+
+    def on_finish(self, cb: Callable[[RequestHandle], None]) -> Callable:
+        return self.subscribe("finish", cb)
+
+    def on_preempt(self, cb: Callable[[RequestHandle], None]) -> Callable:
+        return self.subscribe("preempt", cb)
+
+    def on_abort(self, cb: Callable[[RequestHandle], None]) -> Callable:
+        return self.subscribe("abort", cb)
+
+    def on_shed(self, cb: Callable[[RequestHandle], None]) -> Callable:
+        return self.subscribe("shed", cb)
+
+    # emission ------------------------------------------------------------
+    def emit(self, event: str, payload) -> None:
+        for cb in list(self._subs[event]):
+            cb(payload)
+
+
+class LiveMetrics:
+    """Event-driven serving metrics, updated as tokens stream.
+
+    Attainment follows ``EngineStats.slo_attainment`` exactly: only
+    *decidable* finished online requests enter the denominator (ttft needs a
+    first token; tpot needs >= 2 output tokens), so at end of run the live
+    numbers equal the post-hoc scrape."""
+
+    def __init__(self, bus: EventBus):
+        self.online_tokens = 0
+        self.offline_tokens = 0
+        self.first_tokens = 0
+        self.finished_online = 0
+        self.finished_offline = 0
+        self.aborted = 0
+        self.shed = 0
+        self.preemptions = 0
+        self.completed_offline_tokens = 0   # prompt + generated, on finish
+        self.last_offline_finish_t: Optional[float] = None
+        self._slo = {"ttft": [0, 0], "tpot": [0, 0]}    # kind -> [ok, n]
+        bus.on_token(self._token)
+        bus.on_first_token(self._first_token)
+        bus.on_finish(self._finish)
+        bus.on_preempt(self._preempt)
+        bus.on_abort(self._abort)
+        bus.on_shed(self._shed_cb)
+
+    # ------------------------------------------------------------- handlers
+    def _token(self, ev: TokenEvent) -> None:
+        if ev.handle.request.is_online:
+            self.online_tokens += 1
+        else:
+            self.offline_tokens += 1
+
+    def _first_token(self, ev: TokenEvent) -> None:
+        self.first_tokens += 1
+
+    def _finish(self, handle: RequestHandle) -> None:
+        req = handle.request
+        if req.is_online:
+            self.finished_online += 1
+            if req.slo is not None:
+                ttft, tpot = req.ttft(), req.tpot()
+                if ttft is not None:
+                    self._slo["ttft"][1] += 1
+                    self._slo["ttft"][0] += ttft <= req.slo.ttft
+                if tpot is not None:
+                    self._slo["tpot"][1] += 1
+                    self._slo["tpot"][0] += tpot <= req.slo.tpot
+        else:
+            self.finished_offline += 1
+            self.completed_offline_tokens += req.prompt_len + req.n_output
+            self.last_offline_finish_t = req.finish_time
+
+    def _preempt(self, handle: RequestHandle) -> None:
+        self.preemptions += 1
+
+    def _abort(self, handle: RequestHandle) -> None:
+        self.aborted += 1
+
+    def _shed_cb(self, handle: RequestHandle) -> None:
+        self.shed += 1
+
+    # ------------------------------------------------------------- queries
+    def slo_attainment(self, kind: str = "ttft") -> float:
+        ok, n = self._slo[kind]
+        return ok / n if n else 1.0
+
+    def offline_throughput(self) -> float:
+        """Completed offline work per second of offline activity, from
+        events alone (finish-time makespan)."""
+        if self.last_offline_finish_t is None:
+            return 0.0
+        return self.completed_offline_tokens / (self.last_offline_finish_t
+                                                + 1e-9)

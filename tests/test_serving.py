@@ -1,0 +1,438 @@
+"""EchoService facade: API equivalence with the legacy submit_all+run path,
+streaming token events, mid-flight cancellation with zero leaked blocks,
+and admission-control backpressure — on engine and cluster backends."""
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterSimulator
+from repro.core import (ECHO, SLO, EchoEngine, Request, RequestState,
+                        TaskType, TimeModel)
+from repro.core.simulator import clone_requests
+from repro.data import make_offline_corpus, make_online_requests
+from repro.serving import (AdmissionConfig, EchoService, HandleStatus,
+                           RequestHandle)
+
+TM_KW = dict()
+
+
+def _tm():
+    return TimeModel.a100()
+
+
+def _workload(seed=0, duration=6.0, rate=2.0):
+    rng = np.random.default_rng(seed)
+    arrivals = list(np.cumsum(rng.exponential(1.0 / rate, int(rate * duration))))
+    online = make_online_requests(arrivals, prompt_mean=48, prompt_std=12,
+                                  max_new_mean=8, slo=SLO(1.0, 0.1),
+                                  seed=seed + 1)
+    offline = make_offline_corpus(3, 8, doc_len=96, question_len=16,
+                                  max_new=6, seed=seed + 2)
+    return online, offline
+
+
+def _engine(num_blocks=128, **kw):
+    return EchoEngine(None, None, ECHO, num_blocks=num_blocks, block_size=16,
+                      chunk_size=32, time_model=_tm(), **kw)
+
+
+def assert_no_block_leaks(engine):
+    """Every referenced block must be owned by a live running request, and
+    a drained engine must hold no references at all."""
+    owned = set()
+    for r in engine.scheduler.running:
+        owned.update(r.block_ids)
+    for b in engine.bm.blocks:
+        if b.ref > 0:
+            assert b.bid in owned, f"block {b.bid} referenced but unowned"
+    # free-list + cached + running must account for every block
+    n_free = engine.bm.free_blocks
+    n_cached = engine.bm.cached_blocks
+    n_running = engine.bm.running_blocks
+    assert n_free + n_cached + n_running == engine.bm.num_blocks
+
+
+# --------------------------------------------------------------- equivalence
+def test_drive_matches_legacy_engine():
+    online, offline = _workload()
+    legacy = _engine()
+    for r in clone_requests(online + offline, preserve_rid=True):
+        legacy.submit(r)
+    want = legacy.run(max_iters=20_000, until_time=60.0)
+
+    service = EchoService(_engine())
+    got = service.drive(clone_requests(online + offline, preserve_rid=True),
+                        max_iters=20_000, until_time=60.0)
+    assert len(got.finished) == len(want.finished)
+    assert got.offline_throughput() == want.offline_throughput()
+    assert got.slo_attainment("ttft") == want.slo_attainment("ttft")
+    assert got.slo_attainment("tpot") == want.slo_attainment("tpot")
+
+
+def test_drive_matches_legacy_cluster():
+    online, offline = _workload(seed=7, duration=8.0, rate=3.0)
+
+    def sim():
+        return ClusterSimulator(3, ECHO, num_blocks=96, time_model=_tm(),
+                                seed=0)
+
+    legacy = sim()
+    legacy.submit_all(clone_requests(online + offline, preserve_rid=True))
+    want = legacy.run(until_time=60.0)
+
+    service = EchoService(sim())
+    got = service.drive(clone_requests(online + offline, preserve_rid=True),
+                        until_time=60.0)
+    assert got.finished_counts() == want.finished_counts()
+    assert got.offline_throughput() == want.offline_throughput()
+    assert got.slo_attainment("ttft") == want.slo_attainment("ttft")
+    assert got.slo_attainment("tpot") == want.slo_attainment("tpot")
+
+
+def test_live_metrics_match_post_hoc_stats():
+    online, offline = _workload(seed=3)
+    service = EchoService(_engine())
+    stats = service.drive(clone_requests(online + offline), max_iters=20_000)
+    live = service.live
+    on_done = sum(1 for r in stats.finished if r.is_online)
+    assert live.finished_online == on_done
+    assert live.finished_offline == len(stats.finished) - on_done
+    assert live.slo_attainment("ttft") == stats.slo_attainment("ttft")
+    assert live.slo_attainment("tpot") == stats.slo_attainment("tpot")
+
+
+# ----------------------------------------------------------------- streaming
+def test_streaming_token_events_arrive_before_final_iteration():
+    online, offline = _workload(seed=11)
+    eng = _engine()
+    service = EchoService(eng)
+    seen_at_iter = []
+    service.events.on_token(
+        lambda ev: seen_at_iter.append(len(eng.stats.iterations)))
+    service.drive(clone_requests(online + offline), max_iters=20_000)
+    total = len(eng.stats.iterations)
+    assert seen_at_iter, "no token events fired"
+    assert seen_at_iter[0] < total - 1, \
+        "first token event must precede the final iteration"
+
+
+def test_handle_tokens_generator_streams_incrementally():
+    service = EchoService(_engine())
+    h = service.submit(tuple(range(40)), task_type="online",
+                       max_new_tokens=6, slo=SLO(1.0, 0.1), arrival_time=0.0)
+    doc = tuple(range(200, 280))
+    for i in range(3):
+        service.submit(doc + tuple(range(300 + 8 * i, 306 + 8 * i)),
+                       task_type="offline", max_new_tokens=4)
+    got = []
+    for ev in h.tokens():
+        got.append(ev.token)
+        assert ev.handle is h
+        assert ev.index == len(got) - 1
+        # mid-stream the offline work is still outstanding: streaming
+        # interleaves with scheduling rather than waiting for a drain
+        if ev.first:
+            assert service.backend.has_work()
+    assert got == list(h.request.output_tokens)
+    assert h.status is HandleStatus.FINISHED
+    assert h.ttft() is not None
+    service.run()          # drain the offline remainder
+
+
+def test_first_token_and_finish_events():
+    service = EchoService(_engine())
+    firsts, finishes = [], []
+    service.events.on_first_token(lambda ev: firsts.append(ev.handle.rid))
+    service.events.on_finish(lambda hd: finishes.append(hd.rid))
+    hs = [service.submit(tuple(range(i * 7, i * 7 + 30)),
+                         task_type="offline", max_new_tokens=3)
+          for i in range(3)]
+    service.run()
+    assert sorted(firsts) == sorted(h.rid for h in hs)
+    assert sorted(finishes) == sorted(h.rid for h in hs)
+    assert all(h.status is HandleStatus.FINISHED for h in hs)
+
+
+# --------------------------------------------------------------- cancellation
+def test_abort_running_online_request_frees_blocks():
+    service = EchoService(_engine(num_blocks=96))
+    target = service.submit(tuple(range(64)), task_type="online",
+                            max_new_tokens=50, slo=SLO(5.0, 1.0),
+                            arrival_time=0.0)
+    rest = [service.submit(tuple(range(100 + i * 40, 148 + i * 40)),
+                           task_type="offline", max_new_tokens=4)
+            for i in range(3)]
+    # run until the target is mid-decode (running, holding blocks)
+    for ev in target.tokens():
+        if ev.index >= 2:
+            break
+    assert target.status is HandleStatus.RUNNING
+    assert target.request.block_ids, "target should hold KV blocks"
+    eng = service.engine
+
+    assert target.abort()
+    assert target.status is HandleStatus.ABORTED
+    assert target.request.block_ids == [], "abort must release all blocks"
+    assert target.request not in eng.scheduler.running
+    assert_no_block_leaks(eng)
+    assert not target.abort(), "double-abort must be a no-op"
+
+    # scheduler still makes progress: remaining offline work completes
+    stats = service.run()
+    assert all(h.status is HandleStatus.FINISHED for h in rest)
+    assert target.request not in stats.finished
+    assert target.request in stats.aborted
+    assert_no_block_leaks(eng)
+    assert eng.bm.running_blocks == 0
+
+
+def test_abort_preempted_offline_request_drops_pool_pins():
+    # tiny cache + an online burst forces offline preemption (recompute
+    # mode: the victim returns to the OfflinePool)
+    eng = _engine(num_blocks=20)
+    service = EchoService(eng)
+    doc = tuple(range(500, 596))
+    offs = [service.submit(doc + tuple(range(700 + 9 * i, 708 + 9 * i)),
+                           task_type="offline", max_new_tokens=40)
+            for i in range(2)]
+    onl = [service.submit(tuple(range(i * 70, i * 70 + 60)),
+                          task_type="online", max_new_tokens=12,
+                          slo=SLO(10.0, 1.0), arrival_time=0.01 * (i + 1))
+           for i in range(3)]
+    preempted = []
+    service.events.on_preempt(lambda hd: preempted.append(hd))
+    for _ in range(400):
+        victim = next((h for h in offs
+                       if h.status is HandleStatus.PREEMPTED), None)
+        if victim is not None:
+            break
+        if not service.step():
+            break
+    assert victim is not None, "no offline request was preempted"
+    assert preempted, "preempt event must fire"
+    assert victim.request in eng.pool
+
+    chain = eng.pool._chains[victim.request.rid]
+    rc_before = [eng.pool.rc(h) for h in chain]
+    assert victim.abort()
+    assert victim.request not in eng.pool
+    for h, before in zip(chain, rc_before):
+        assert eng.pool.rc(h) == before - 1, "radix-pool pin not dropped"
+    assert victim.request.block_ids == []
+    assert_no_block_leaks(eng)
+
+    service.run()
+    for h in onl + [o for o in offs if o is not victim]:
+        assert h.status is HandleStatus.FINISHED, h
+    assert eng.bm.running_blocks == 0
+    assert_no_block_leaks(eng)
+
+
+def test_abort_queued_request_before_start():
+    service = EchoService(_engine())
+    h = service.submit(tuple(range(30)), task_type="online",
+                       max_new_tokens=4, slo=SLO(1.0, 0.1),
+                       arrival_time=100.0)          # far future
+    assert h.status is HandleStatus.QUEUED
+    assert h.abort()
+    assert h.status is HandleStatus.ABORTED
+    assert h.result().tokens == []
+
+
+def test_abort_on_cluster_backend():
+    sim = ClusterSimulator(2, ECHO, num_blocks=64, time_model=_tm(), seed=0)
+    service = EchoService(sim)
+    hs = [service.submit(tuple(range(i * 30, i * 30 + 40)),
+                         task_type="offline", max_new_tokens=30)
+          for i in range(4)]
+    for _ in range(6):
+        service.step()
+    victim = next((h for h in hs if h.status is HandleStatus.RUNNING), hs[0])
+    assert victim.abort()
+    assert victim.status is HandleStatus.ABORTED
+    service.run()
+    for eng in service.backend.engines():
+        assert_no_block_leaks(eng)
+        assert eng.bm.running_blocks == 0
+    done = [h for h in hs if h is not victim]
+    assert all(h.status is HandleStatus.FINISHED for h in done)
+
+
+# ----------------------------------------------------------------- admission
+def test_bounded_online_queue_sheds():
+    service = EchoService(_engine(),
+                          admission=AdmissionConfig(max_online_queue=2))
+    shed = []
+    service.events.on_shed(lambda hd: shed.append(hd))
+    hs = [service.submit(tuple(range(i, i + 30)), task_type="online",
+                         max_new_tokens=3, slo=SLO(1.0, 0.1),
+                         arrival_time=0.0)
+          for i in range(6)]
+    statuses = [h.status for h in hs]
+    assert statuses.count(HandleStatus.SHED) == 4
+    assert len(shed) == 4
+    service.run()
+    assert sum(1 for h in hs if h.status is HandleStatus.FINISHED) == 2
+    assert service.live.shed == 4
+
+
+def test_slo_infeasible_arrival_is_shed():
+    service = EchoService(
+        _engine(), admission=AdmissionConfig(slo_shed_factor=1.0))
+    # impossibly tight TTFT: the TimeModel alone predicts a miss
+    h = service.submit(tuple(range(512)), task_type="online",
+                       max_new_tokens=4, slo=SLO(ttft=1e-6, tpot=0.1),
+                       arrival_time=0.0)
+    assert h.status is HandleStatus.SHED
+    # a feasible one still gets through
+    ok = service.submit(tuple(range(40)), task_type="online",
+                        max_new_tokens=4, slo=SLO(10.0, 1.0),
+                        arrival_time=0.0)
+    assert ok.status is HandleStatus.QUEUED
+    service.run()
+    assert ok.status is HandleStatus.FINISHED
+
+
+def test_offline_soft_cap_defers_and_feeds():
+    service = EchoService(
+        _engine(), admission=AdmissionConfig(offline_pool_cap=2))
+    hs = [service.submit(tuple(range(i * 31, i * 31 + 40)),
+                         task_type="offline", max_new_tokens=3)
+          for i in range(5)]
+    deferred = [h for h in hs if h._deferred]
+    assert len(deferred) == 3, "work beyond the soft cap must be deferred"
+    assert all(h.status is HandleStatus.QUEUED for h in deferred)
+    assert service.backend.offline_backlog() == 2
+    service.run()
+    assert all(h.status is HandleStatus.FINISHED for h in hs), \
+        "deferred work must eventually be fed and complete"
+
+
+def test_abort_deferred_offline_request():
+    service = EchoService(
+        _engine(), admission=AdmissionConfig(offline_pool_cap=1))
+    h1 = service.submit(tuple(range(40)), task_type="offline", max_new_tokens=3)
+    h2 = service.submit(tuple(range(50, 90)), task_type="offline",
+                        max_new_tokens=3)
+    assert h2._deferred
+    assert h2.abort()
+    assert h2.status is HandleStatus.ABORTED
+    service.run()
+    assert h1.status is HandleStatus.FINISHED
+    assert h2.result().tokens == []
+
+
+def test_trace_replay_admission_judges_at_arrival_time():
+    """Regression: driving a pre-generated trace through admission must
+    judge each request when the clock REACHES its arrival, not against the
+    t=0 queue at submit time — otherwise a bounded queue sheds nearly the
+    whole trace."""
+    # 12 online arrivals spread 0.5s apart: never more than one waiting
+    online = make_online_requests([0.5 * i for i in range(12)],
+                                  prompt_mean=40, prompt_std=8,
+                                  max_new_mean=4, slo=SLO(1.0, 0.1), seed=5)
+    service = EchoService(_engine(),
+                          admission=AdmissionConfig(max_online_queue=2))
+    stats = service.drive(clone_requests(online), max_iters=20_000)
+    assert service.live.shed == 0, \
+        "spread-out arrivals must not be shed by a bounded queue"
+    assert len(stats.finished) == len(online)
+
+    # same trace collapsed onto t=0 *is* shed beyond the bound
+    squeezed = clone_requests(online)
+    for r in squeezed:
+        r.arrival_time = 0.0
+    service2 = EchoService(_engine(),
+                           admission=AdmissionConfig(max_online_queue=2))
+    service2.drive(squeezed, max_iters=20_000)
+    assert service2.live.shed == len(online) - 2
+
+
+def test_inactive_admission_config_is_passthrough():
+    """Regression: a present-but-gateless AdmissionConfig must behave like
+    no admission at all — future-dated requests must not be held forever."""
+    online, offline = _workload(seed=13)
+    service = EchoService(_engine(), admission=AdmissionConfig())
+    stats = service.drive(clone_requests(online + offline), max_iters=20_000)
+    assert len(stats.finished) == len(online) + len(offline)
+    assert not service._held
+
+
+def test_shed_on_idle_release_does_not_strand_later_arrivals():
+    """Regression: when an idle backend force-releases a held arrival that
+    gets shed (nothing submitted), later held arrivals must still be judged
+    and served rather than stranded."""
+    service = EchoService(
+        _engine(), admission=AdmissionConfig(slo_shed_factor=1.0))
+    bad = service.submit(tuple(range(600)), task_type="online",
+                         max_new_tokens=2, slo=SLO(1e-6, 0.1),
+                         arrival_time=1.0)
+    good = [service.submit(tuple(range(i * 40, i * 40 + 30)),
+                           task_type="online", max_new_tokens=2,
+                           slo=SLO(10.0, 1.0), arrival_time=2.0 + i)
+            for i in range(3)]
+    service.run()
+    assert bad.status is HandleStatus.SHED
+    assert all(h.status is HandleStatus.FINISHED for h in good)
+
+
+def test_terminal_handles_are_evicted_from_service():
+    service = EchoService(_engine())
+    hs = [service.submit(tuple(range(i * 9, i * 9 + 20)),
+                         task_type="offline", max_new_tokens=2)
+          for i in range(3)]
+    assert len(service.handles) == 3
+    service.run()
+    assert all(h.status is HandleStatus.FINISHED for h in hs)
+    assert not service.handles, "terminal handles must be evicted"
+
+
+def test_cluster_undispatched_abort_is_counted():
+    sim = ClusterSimulator(2, ECHO, num_blocks=64, time_model=_tm(), seed=0)
+    service = EchoService(sim)
+    h = service.submit(tuple(range(30)), task_type="offline",
+                       max_new_tokens=2, arrival_time=50.0)
+    assert h.abort()                       # still in the cluster arrival heap
+    stats = service.stats()
+    assert h.request in stats.merged().aborted
+    assert service.live.aborted == 1
+
+
+def test_abort_held_future_arrival():
+    service = EchoService(_engine(),
+                          admission=AdmissionConfig(max_online_queue=8))
+    h = service.submit(tuple(range(30)), task_type="online",
+                       max_new_tokens=3, slo=SLO(1.0, 0.1), arrival_time=9.0)
+    assert h.status is HandleStatus.QUEUED and h._deferred
+    assert h.abort()
+    assert h.status is HandleStatus.ABORTED
+    assert not service._held
+
+
+# --------------------------------------------------------------- intake order
+def test_engine_submit_keeps_pending_sorted():
+    eng = _engine()
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=(1, 2, 3), max_new_tokens=1,
+                    task_type=TaskType.OFFLINE,
+                    arrival_time=float(t))
+            for t in rng.uniform(0, 10, 50)]
+    for r in reqs:
+        eng.submit(r)
+    keys = [(r.arrival_time, r.rid) for r in eng.pending]
+    assert keys == sorted(keys)
+    # _pull_arrivals drains in order (micro-assert inside must not fire)
+    eng.now = 20.0
+    eng._pull_arrivals()
+    assert not eng.pending
+
+
+def test_service_status_reflects_lifecycle():
+    service = EchoService(_engine())
+    h = service.submit(tuple(range(40)), task_type="online",
+                       max_new_tokens=3, slo=SLO(1.0, 0.1), arrival_time=0.0)
+    assert h.status is HandleStatus.QUEUED
+    service.step()
+    assert h.status in (HandleStatus.RUNNING, HandleStatus.FINISHED)
+    service.run()
+    assert h.status is HandleStatus.FINISHED
+    assert h.request.state == RequestState.FINISHED
