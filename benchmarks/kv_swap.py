@@ -1,0 +1,133 @@
+"""Host-tier KV swap benchmark: recompute-only vs swap-enabled Echo.
+
+The shared §7.1 burst scenario at elevated memory pressure (half the device
+blocks of the default): online bursts flush the offline prefix working set,
+and without a host tier every flushed block is re-prefilled from scratch —
+exactly the recompute the KV manager exists to avoid (§4.2). With the swap
+tier, evicted blocks with future reuse are parked in host memory and
+restored over PCIe when the scheduler prices the transfer under the
+recompute (Eq.6 vs. the TimeModel's swap terms).
+
+Reported per mode: offline throughput, SLO attainment, swap traffic,
+punished (future-needed, recompute-bound) tokens. Headline: throughput
+ratio at equal-or-better SLO attainment.
+
+Standalone JSON mode (CI artifact):
+    PYTHONPATH=src:. python benchmarks/kv_swap.py --json out.json
+Tiny smoke mode (CI):
+    PYTHONPATH=src:. python benchmarks/kv_swap.py --smoke
+"""
+from __future__ import annotations
+
+from benchmarks.scenario import build_engine
+from repro.core import ECHO
+
+SEED = 0
+HOST_BLOCKS = 320          # ~1.3x the device budget, a fraction of host RAM
+# Half the default device blocks: the offline working set (10 docs x 20
+# blocks) no longer survives online bursts on device — the regime where
+# swap-vs-recompute decides throughput.
+OVERRIDES = dict(num_blocks=128, burst_rate=10.0, burst_prob=0.08)
+SMOKE = dict(duration=8.0, n_docs=3, questions=12, num_blocks=64,
+             max_iters=4_000)
+
+
+def _run(host_blocks: int, overrides=None, max_iters: int = 60_000):
+    ov = dict(OVERRIDES)
+    ov.update(overrides or {})
+    eng, online, offline, p = build_engine(ECHO, seed=SEED,
+                                           host_kv_blocks=host_blocks, **ov)
+    stats = eng.run(max_iters=max_iters, until_time=p["duration"] * 6)
+    return eng, stats, online, offline
+
+
+def results(smoke: bool = False):
+    overrides = dict(SMOKE) if smoke else {}
+    max_iters = overrides.pop("max_iters", 60_000)
+    out = {}
+    for mode, host in (("recompute", 0), ("swap", HOST_BLOCKS)):
+        eng, stats, online, offline = _run(host, overrides, max_iters)
+        m = eng.bm.metrics
+        out[mode] = {
+            "host_blocks": host,
+            "offline_throughput": stats.offline_throughput(),
+            "slo_ttft": stats.slo_attainment("ttft"),
+            "slo_tpot": stats.slo_attainment("tpot"),
+            "online_finished": sum(1 for r in stats.finished if r.is_online),
+            "offline_finished": sum(1 for r in stats.finished
+                                    if not r.is_online),
+            "evictions": m.evictions,
+            "punished_tokens": m.punished_tokens,
+            "swapped_out_tokens": m.swapped_out_tokens,
+            "swapped_in_tokens": m.swapped_in_tokens,
+            "host_bounced_blocks": m.host_bounced_blocks,
+        }
+    rec, sw = out["recompute"], out["swap"]
+    out["headline"] = {
+        "tput_ratio": sw["offline_throughput"]
+        / max(rec["offline_throughput"], 1e-9),
+        "slo_delta_ttft": sw["slo_ttft"] - rec["slo_ttft"],
+        "slo_delta_tpot": sw["slo_tpot"] - rec["slo_tpot"],
+        "punished_tokens_saved": rec["punished_tokens"]
+        - sw["punished_tokens"],
+        # the acceptance gate: swap-enabled must match recompute-only's SLO
+        # attainment while completing at least as much offline work
+        "swap_wins": bool(
+            sw["offline_throughput"] >= rec["offline_throughput"]
+            and sw["slo_ttft"] >= rec["slo_ttft"] - 1e-9
+            and sw["slo_tpot"] >= rec["slo_tpot"] - 1e-9),
+    }
+    return out
+
+
+def rows():
+    res = results()
+    out = []
+    for mode in ("recompute", "swap"):
+        r = res[mode]
+        out.append((f"kv_swap.{mode}.offline_tput", 0.0,
+                    f"{r['offline_throughput']:.1f}"))
+        out.append((f"kv_swap.{mode}.slo_ttft", 0.0, f"{r['slo_ttft']:.3f}"))
+        out.append((f"kv_swap.{mode}.slo_tpot", 0.0, f"{r['slo_tpot']:.3f}"))
+        out.append((f"kv_swap.{mode}.punished_tokens", 0.0,
+                    f"{r['punished_tokens']}"))
+    h = res["headline"]
+    out.append(("kv_swap.tput_ratio", 0.0, f"{h['tput_ratio']:.3f}"))
+    out.append(("kv_swap.swap_wins", 0.0, str(h["swap_wins"])))
+    return out
+
+
+def main():
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write results to this path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale run (CI): exercises the swap path, "
+                         "skips the headline win check")
+    args = ap.parse_args()
+    res = results(smoke=args.smoke)
+    for mode in ("recompute", "swap"):
+        r = res[mode]
+        print(f"{mode:>9}: tput {r['offline_throughput']:8.1f} tok/s  "
+              f"ttft {r['slo_ttft']:.3f}  tpot {r['slo_tpot']:.3f}  "
+              f"punished {r['punished_tokens']:6d}  "
+              f"swap in/out {r['swapped_in_tokens']}/"
+              f"{r['swapped_out_tokens']}")
+    h = res["headline"]
+    print(f"headline: tput x{h['tput_ratio']:.2f}  "
+          f"slo dTTFT {h['slo_delta_ttft']:+.3f} "
+          f"dTPOT {h['slo_delta_tpot']:+.3f}  "
+          f"swap_wins={h['swap_wins']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2)
+        print(f"wrote {args.json}")
+    if not args.smoke and not h["swap_wins"]:
+        raise SystemExit("swap-enabled Echo did not beat recompute-only "
+                         "at equal-or-better SLO attainment")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,7 @@ def _section(name, fn, rows_out):
 def main() -> None:
     from benchmarks import (ablations, calibration, capacity, cluster,
                             estimator_accuracy)
-    from benchmarks import figures, kernels_micro, roofline
+    from benchmarks import figures, kernels_micro, kv_swap, roofline
 
     rows = []
     _section("fig6", figures.fig6_throughput_speedup, rows)
@@ -39,6 +39,7 @@ def main() -> None:
     _section("fig11", figures.fig11_trace_prediction, rows)
     _section("estimator", estimator_accuracy.rows, rows)
     _section("calibration", calibration.rows, rows)
+    _section("kv_swap", kv_swap.rows, rows)
     _section("capacity", capacity.rows, rows)
     _section("cluster", cluster.rows, rows)
     _section("kernels", kernels_micro.rows, rows)

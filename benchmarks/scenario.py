@@ -13,6 +13,7 @@ from repro.serving import EchoService
 # LRU — the setting of Fig. 9 where the task-aware manager pays off.
 DEFAULTS = dict(
     num_blocks=256, block_size=16, chunk_size=64, max_running=48,
+    host_kv_blocks=0,                 # host swap tier off unless asked
     duration=60.0,
     online_rate=1.5, burst_rate=8.0, burst_len=8.0, burst_prob=0.05,
     online_prompt=160, online_new=24, slo=SLO(1.0, 0.1),
@@ -51,7 +52,8 @@ def _make_engine(policy, tm, p, clock_model):
     return EchoEngine(None, None, policy, num_blocks=p["num_blocks"],
                       block_size=p["block_size"], chunk_size=p["chunk_size"],
                       time_model=tm, clock_model=clock_model,
-                      max_running=p["max_running"])
+                      max_running=p["max_running"],
+                      host_kv_blocks=p["host_kv_blocks"])
 
 
 def build_service(policy: PolicyConfig, seed: int = 0, tm_kw=None,

@@ -26,9 +26,12 @@ class FleetReport:
     blocks_per_replica: Optional[int]
     # every probed (replicas, blocks) -> min(TTFT, TPOT) attainment
     slo_by_config: List[Tuple[int, int, float]] = field(default_factory=list)
-    # offline throughput of SLO-feasible configs: (replicas, blocks, tok/s)
-    throughput_by_config: List[Tuple[int, int, float]] = field(default_factory=list)
+    # offline throughput of SLO-feasible configs:
+    # (replicas, blocks, host_blocks, tok/s)
+    throughput_by_config: List[Tuple[int, int, int, float]] = \
+        field(default_factory=list)
     offline_throughput: Optional[float] = None
+    host_blocks_per_replica: int = 0      # §5.4 extended: host-tier sizing
 
 
 class FleetPlanner:
@@ -55,6 +58,7 @@ class FleetPlanner:
     # ------------------------------------------------------------- probes
     def simulate(self, online: Sequence[Request], offline: Sequence[Request],
                  n_replicas: int, num_blocks: int, *,
+                 host_blocks: int = 0,
                  duration: Optional[float] = None,
                  max_iters: int = 200_000) -> ClusterStats:
         sim = ClusterSimulator(n_replicas, self.policy,
@@ -64,7 +68,8 @@ class FleetPlanner:
                                chunk_size=self.chunk_size,
                                max_running=self.max_running, seed=self.seed,
                                time_model=self.tm,
-                               clock_models=self.clock_models)
+                               clock_models=self.clock_models,
+                               host_kv_blocks=host_blocks)
         sim.submit_all(clone_requests(online) + clone_requests(offline))
         return sim.run(max_iters=max_iters, until_time=duration)
 
@@ -90,12 +95,19 @@ class FleetPlanner:
              offline: Sequence[Request], *,
              candidate_replicas: Sequence[int] = (1, 2, 4),
              candidate_blocks: Sequence[int] = (64, 128, 256),
+             candidate_host_blocks: Sequence[int] = (0,),
              slo_target: float = 0.9,
              offline_target: Optional[float] = None,
              duration: Optional[float] = None) -> FleetReport:
         """Step 1: smallest fleet whose online attainment meets the target.
         Step 2: at each SLO-feasible config, measure co-served offline
-        throughput; require ``offline_target`` too when given."""
+        throughput; require ``offline_target`` too when given.
+
+        ``candidate_host_blocks`` extends the §5.4 search to the host swap
+        tier (replicas x device blocks x host blocks): host memory is far
+        cheaper than HBM, so the planner prefers the smallest host tier that
+        lifts a device-feasible config over the offline target before
+        growing device blocks or the fleet."""
         report = FleetReport(None, None)
         for n in sorted(candidate_replicas):
             for nb in sorted(candidate_blocks):
@@ -106,14 +118,16 @@ class FleetPlanner:
                 report.slo_by_config.append((n, nb, att))
                 if att < slo_target:
                     continue
-                full = self.simulate(online_peak, offline, n, nb,
-                                     duration=duration)
-                tput = full.offline_throughput()
-                report.throughput_by_config.append((n, nb, tput))
-                if offline_target is not None and tput < offline_target:
-                    continue        # bigger cache may lift throughput
-                report.min_replicas = n
-                report.blocks_per_replica = nb
-                report.offline_throughput = tput
-                return report
+                for hb in sorted(candidate_host_blocks):
+                    full = self.simulate(online_peak, offline, n, nb,
+                                         host_blocks=hb, duration=duration)
+                    tput = full.offline_throughput()
+                    report.throughput_by_config.append((n, nb, hb, tput))
+                    if offline_target is not None and tput < offline_target:
+                        continue    # bigger cache/host tier may lift it
+                    report.min_replicas = n
+                    report.blocks_per_replica = nb
+                    report.host_blocks_per_replica = hb
+                    report.offline_throughput = tput
+                    return report
         return report

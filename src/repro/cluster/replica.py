@@ -55,16 +55,18 @@ class Replica:
                   chunk_size: int = 64, time_model: Optional[TimeModel] = None,
                   clock_model=None,
                   max_batch_tokens: int = 2048, max_running: int = 64,
-                  seed: int = 0) -> "Replica":
+                  host_kv_blocks: int = 0, seed: int = 0) -> "Replica":
         """``time_model`` is this replica's *estimate* (what its scheduler
         believes); ``clock_model`` its ground-truth hardware profile — pass
-        different ones per replica for a heterogeneous/miscalibrated fleet."""
+        different ones per replica for a heterogeneous/miscalibrated fleet.
+        ``host_kv_blocks`` sizes this replica's host KV swap tier."""
         eng = EchoEngine(None, None, policy, num_blocks=num_blocks,
                          block_size=block_size, chunk_size=chunk_size,
                          time_model=time_model, clock_model=clock_model,
                          clock="virtual",
                          seed=seed, max_batch_tokens=max_batch_tokens,
-                         max_running=max_running)
+                         max_running=max_running,
+                         host_kv_blocks=host_kv_blocks)
         return cls(replica_id, eng)
 
     # ------------------------------------------------------------- intake

@@ -73,6 +73,7 @@ class ClusterSimulator:
                  time_model: Optional[TimeModel] = None,
                  clock_models: Optional[Sequence] = None,
                  max_batch_tokens: int = 2048, max_running: int = 64,
+                 host_kv_blocks: int = 0,
                  seed: int = 0, steal_queue_depth: int = 4,
                  steal_batch: int = 8, rebalance_every: int = 8):
         if n_replicas < 1:
@@ -99,7 +100,8 @@ class ClusterSimulator:
                               time_model=copy.deepcopy(tm),
                               clock_model=clock_for(i),
                               max_batch_tokens=max_batch_tokens,
-                              max_running=max_running, seed=seed + i)
+                              max_running=max_running,
+                              host_kv_blocks=host_kv_blocks, seed=seed + i)
             for i in range(n_replicas)
         ]
         self.router = Router(self.replicas, policy=router_policy, seed=seed,

@@ -1,4 +1,4 @@
-"""Task-aware paged KV cache manager (paper §4.2).
+"""Task-aware paged KV cache manager (paper §4.2) with a host swap tier.
 
 Block-granular KV cache with hash-based automatic prefix caching (vLLM APC
 style) and *priority + LRU* eviction:
@@ -14,6 +14,15 @@ plus a *threshold* capping the blocks held by running requests, reserving
 headroom for bursty online arrivals (set by the memory predictor, §5.3).
 With ``task_aware=False`` the manager degenerates to vLLM's plain LRU free
 table (the BS baseline).
+
+The optional **host tier** (``HostTier``) is a bounded, hash-addressed,
+CPU-resident second level: blocks whose priority justifies it (future reuse
+rc > 0, or a preempted online owner that will return) are *swapped out* on
+eviction instead of dropped, and ``swap_in`` restores a leading prefix over
+PCIe instead of recomputing it. The manager only does the bookkeeping and
+journals (bid, hash) swap events; the engine stages the actual payloads
+against the runner (``drain_swap_events``) and the scheduler decides
+swap-in vs. recompute per candidate using the TimeModel's transfer terms.
 """
 from __future__ import annotations
 
@@ -26,6 +35,7 @@ from repro.core.request import Request, TaskType
 
 ONLINE_PREEMPTED_PRIORITY = 1e9
 ONLINE_FINISHED_PRIORITY = 0.5
+SWAP_MIN_PRIORITY = 1.0       # swap out only blocks with forward reuse
 
 
 def chain_hash(prev: int, tokens: Tuple[int, ...]) -> int:
@@ -44,6 +54,95 @@ class Block:
 
 
 @dataclass
+class HostBlock:
+    """One hash-addressed KV block resident in host memory. ``payload`` is
+    the per-layer KV content on the real-runner path (staged by the engine
+    via ``PagedRunner.read_block``); None on the virtual path."""
+    hash: int
+    n_tokens: int
+    task_type: TaskType
+    unfinished_owners: int = 0
+    lat: float = 0.0
+    payload: Optional[object] = None
+
+
+class HostTier:
+    """Bounded host-memory swap space, hash-addressed, priority-evicted.
+
+    Mirrors the device tier's lazy-heap (priority, LAT) eviction order so
+    the least valuable host block is dropped first when the tier overflows.
+    ``reserve`` slots are kept clear of low-priority (non-preempted-online)
+    blocks — the memory predictor sizes this headroom so a predicted online
+    burst can always swap its preempted KV out instead of losing it.
+    """
+
+    def __init__(self, capacity_blocks: int,
+                 priority_of: Optional[Callable[["HostBlock"], float]] = None):
+        self.capacity = capacity_blocks
+        self.priority_of = priority_of or (lambda hb: 1.0)
+        self.blocks: Dict[int, HostBlock] = {}
+        self._heap: List[Tuple[float, float, int, int]] = []  # lazy entries
+        self._seq = itertools.count()
+        self.reserve = 0                 # slots kept free for bursty swaps
+
+    def __len__(self) -> int:
+        return len(self.blocks)
+
+    def __contains__(self, h: int) -> bool:
+        return h in self.blocks
+
+    def get(self, h: int) -> Optional[HostBlock]:
+        return self.blocks.get(h)
+
+    def _push(self, hb: HostBlock) -> None:
+        heapq.heappush(self._heap, (self.priority_of(hb), hb.lat,
+                                    next(self._seq), hb.hash))
+
+    def _evict_one(self) -> Optional[HostBlock]:
+        while self._heap:
+            prio, lat, _, h = heapq.heappop(self._heap)
+            hb = self.blocks.get(h)
+            if hb is None:
+                continue                                  # stale entry
+            cur = (self.priority_of(hb), hb.lat)
+            if (prio, lat) != cur:                        # stale meta: refresh
+                self._push(hb)
+                continue
+            del self.blocks[h]
+            return hb
+        return None
+
+    def admit(self, hb: HostBlock) -> bool:
+        """Insert ``hb``, evicting lower-(priority, LAT) residents if full.
+        Returns False when the candidate itself is the least valuable (it
+        bounces) or the tier has no capacity. Low-priority candidates may
+        only fill ``capacity - reserve`` slots."""
+        cap = self.capacity
+        if self.priority_of(hb) < ONLINE_PREEMPTED_PRIORITY:
+            cap = max(cap - self.reserve, 0)
+        if cap <= 0:
+            return False
+        key = (self.priority_of(hb), hb.lat)
+        while len(self.blocks) >= cap:
+            victim = self._evict_one()
+            if victim is None:
+                break
+            if (self.priority_of(victim), victim.lat) > key:
+                self.blocks[victim.hash] = victim         # keep; hb bounces
+                self._push(victim)
+                return False
+        old = self.blocks.get(hb.hash)
+        if old is not None:
+            hb.unfinished_owners += old.unfinished_owners
+        self.blocks[hb.hash] = hb
+        self._push(hb)
+        return True
+
+    def pop(self, h: int) -> Optional[HostBlock]:
+        return self.blocks.pop(h, None)                   # heap entry lazies
+
+
+@dataclass
 class BlockManagerMetrics:
     hit_blocks: int = 0
     lookup_blocks: int = 0
@@ -51,6 +150,11 @@ class BlockManagerMetrics:
     offline_lookup_blocks: int = 0
     evictions: int = 0
     punished_tokens: int = 0             # evicted tokens needed in the future
+    swapped_out_blocks: int = 0
+    swapped_out_tokens: int = 0
+    swapped_in_blocks: int = 0
+    swapped_in_tokens: int = 0           # recompute avoided via host tier
+    host_bounced_blocks: int = 0         # refused by the full host tier
 
     @property
     def hit_rate(self) -> float:
@@ -67,7 +171,8 @@ class BlockManagerMetrics:
 class BlockManager:
     def __init__(self, num_blocks: int, block_size: int, *,
                  task_aware: bool = True,
-                 rc_provider: Optional[Callable[[int], int]] = None):
+                 rc_provider: Optional[Callable[[int], int]] = None,
+                 host_blocks: int = 0):
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.task_aware = task_aware
@@ -79,6 +184,13 @@ class BlockManager:
         self._seq = itertools.count()
         self.threshold_blocks = num_blocks               # running-KV cap
         self.metrics = BlockManagerMetrics()
+        self.host: Optional[HostTier] = (
+            HostTier(host_blocks, self._host_priority)
+            if host_blocks > 0 else None)
+        # journal of ("out"|"in", bid, HostBlock) in decision order; the
+        # engine drains it after scheduling, before the runner writes any
+        # pages, staging payloads on the journaled HostBlock objects
+        self._swap_events: List[Tuple[str, int, HostBlock]] = []
 
     # ------------------------------------------------------------- stats
     @property
@@ -117,6 +229,15 @@ class BlockManager:
             return ONLINE_FINISHED_PRIORITY
         return float(rc)
 
+    def _host_priority(self, hb: HostBlock) -> float:
+        """HostBlock analogue of ``_priority`` (shared rc provider)."""
+        rc = self.rc_provider(hb.hash) + hb.unfinished_owners
+        if hb.task_type == TaskType.ONLINE:
+            if hb.unfinished_owners:
+                return ONLINE_PREEMPTED_PRIORITY
+            return ONLINE_FINISHED_PRIORITY
+        return float(rc)
+
     def _push_evictable(self, blk: Block) -> None:
         heapq.heappush(self._heap, (self._priority(blk), blk.lat,
                                     next(self._seq), blk.bid))
@@ -134,6 +255,125 @@ class BlockManager:
             n += bs
             cached += bs
         return cached
+
+    def probe_host_prefix(self, tokens: Sequence[int], start_tokens: int) -> int:
+        """Tokens restorable by swap-in: the longest run of consecutive full
+        blocks starting at ``start_tokens`` (block-aligned) that are resident
+        in the host tier but NOT on device. Read-only — the scheduler uses
+        this to price swap-in vs. recompute before committing."""
+        if self.host is None or not self.host.blocks:
+            return 0                 # cold tier: skip the chain rehash
+        bs = self.block_size
+        if start_tokens % bs != 0:
+            return 0
+        prev = 0
+        for bi in range(start_tokens // bs):
+            if (bi + 1) * bs > len(tokens):
+                return 0
+            prev = chain_hash(prev, tuple(tokens[bi * bs:(bi + 1) * bs]))
+        n = start_tokens
+        restorable = 0
+        while n + bs <= len(tokens):
+            h = chain_hash(prev, tuple(tokens[n: n + bs]))
+            if h in self.hash_to_bid or h not in self.host:
+                break
+            prev = h
+            n += bs
+            restorable += bs
+        return restorable
+
+    def swap_in(self, req: Request, tokens: Sequence[int], now: float,
+                max_tokens: int, *, respect_threshold: bool = True) -> int:
+        """Restore up to ``max_tokens`` (whole blocks) of ``req``'s leading
+        prefix from the host tier onto device, referencing them to ``req``
+        like cache hits. Journals an "in" event per block for the engine to
+        stage payloads. Returns the tokens restored (0 on memory pressure).
+        The caller advances ``req.computed_tokens`` and charges
+        ``TimeModel.swap_time`` — KV becomes resident without compute.
+        Restored blocks count against the §4.2 running-KV threshold exactly
+        like freshly computed ones (swap-in is not a loophole around the
+        burst headroom)."""
+        if self.host is None or max_tokens < self.block_size:
+            return 0
+        bs = self.block_size
+        start = len(req.block_ids) * bs
+        prev = self._chain_up_to(req, len(req.block_ids), tokens)
+        restored = 0
+        while restored + bs <= max_tokens:
+            n = start + restored
+            if n + bs > len(tokens):
+                break
+            h = chain_hash(prev, tuple(tokens[n: n + bs]))
+            hb = self.host.get(h)
+            if hb is None or h in self.hash_to_bid:
+                break
+            if respect_threshold and self.task_aware and \
+                    self.running_blocks + 1 > self.threshold_blocks:
+                break
+            bid = self._get_free_block()
+            if bid is None:
+                break
+            self.host.pop(h)
+            blk = self.blocks[bid]
+            blk.hash = h
+            blk.ref = 1
+            blk.lat = now
+            blk.task_type = hb.task_type
+            blk.n_tokens = hb.n_tokens
+            blk.unfinished_owners = hb.unfinished_owners
+            if blk.unfinished_owners > 0:                 # owner came back
+                blk.unfinished_owners -= 1
+                if h in req.owner_pins:
+                    req.owner_pins.remove(h)
+            self.hash_to_bid[h] = bid
+            req.block_ids.append(bid)
+            self._swap_events.append(("in", bid, hb))
+            self.metrics.swapped_in_blocks += 1
+            self.metrics.swapped_in_tokens += hb.n_tokens
+            prev = h
+            restored += bs
+        return restored
+
+    def pending_swap_out_tokens(self) -> int:
+        """Undrained swap-OUT traffic journaled by the current scheduling
+        pass — the estimator charges it against the SLO budget alongside
+        planned swap-ins, since the engine will clock both directions."""
+        return sum(hb.n_tokens for kind, _, hb in self._swap_events
+                   if kind == "out")
+
+    def drain_swap_events(self) -> List[Tuple[str, int, HostBlock]]:
+        """Swap decisions since the last drain, in order. The engine must
+        process these before the runner writes any pages this iteration —
+        an "out" bid's device pages are still intact until then, and an
+        "in" whose block was swapped out this same iteration reads the
+        payload staged by its earlier "out" entry (same HostBlock object)."""
+        out, self._swap_events = self._swap_events, []
+        return out
+
+    def release_owner_pins(self, req: Request) -> None:
+        """Drop the unfinished-owner pins an aborted request left on blocks
+        it no longer references (committed blocks released at preemption
+        carry ``unfinished_owners`` for the owner's return — an aborted
+        owner never returns). Covers both tiers; the lazy heaps re-rank the
+        blocks on their next pop.
+
+        Pins are resolved by content hash, matching the rest of the owner
+        accounting (an ``allocate`` hit by ANY same-content request already
+        counts as "the owner came back"): if this request's pinned hash was
+        dropped and later re-pinned by a different request, the release may
+        discharge that pin instead — a priority imprecision, never a
+        correctness issue."""
+        for h in req.owner_pins:
+            bid = self.hash_to_bid.get(h)
+            if bid is not None:
+                blk = self.blocks[bid]
+                if blk.unfinished_owners > 0:
+                    blk.unfinished_owners -= 1
+                continue
+            hb = self.host.get(h) if self.host is not None else None
+            if hb is not None and hb.unfinished_owners > 0:
+                hb.unfinished_owners -= 1
+        req.owner_pins.clear()
 
     def evictable_count(self) -> int:
         return sum(1 for b in self.blocks if b.ref == 0 and b.hash is not None)
@@ -156,6 +396,13 @@ class BlockManager:
         return True
 
     # ------------------------------------------------------------- eviction
+    def would_swap(self, priority: float) -> bool:
+        """Swap-out policy: a block is worth the PCIe round trip only when
+        someone will come back for it — rc > 0 offline (future prefix reuse)
+        or a preempted online owner. Dead offline / finished online blocks
+        are dropped for free exactly as before."""
+        return self.host is not None and priority >= SWAP_MIN_PRIORITY
+
     def _evict_one(self) -> Optional[int]:
         while self._heap:
             prio, lat, _, bid = heapq.heappop(self._heap)
@@ -166,9 +413,22 @@ class BlockManager:
             if (prio, lat) != cur:                        # stale meta: refresh
                 self._push_evictable(blk)
                 continue
-            # evict
+            # evict — swapping to the host tier if the block has a future
             rc = self.rc_provider(blk.hash) + blk.unfinished_owners
-            if rc > 0:
+            swapped = False
+            if rc > 0 and self.would_swap(prio):
+                hb = HostBlock(hash=blk.hash, n_tokens=blk.n_tokens,
+                               task_type=blk.task_type,
+                               unfinished_owners=blk.unfinished_owners,
+                               lat=blk.lat)
+                swapped = self.host.admit(hb)
+                if swapped:
+                    self._swap_events.append(("out", bid, hb))
+                    self.metrics.swapped_out_blocks += 1
+                    self.metrics.swapped_out_tokens += blk.n_tokens
+                else:
+                    self.metrics.host_bounced_blocks += 1
+            if rc > 0 and not swapped:
                 self.metrics.punished_tokens += blk.n_tokens
             del self.hash_to_bid[blk.hash]
             blk.hash = None
@@ -177,6 +437,32 @@ class BlockManager:
             self.metrics.evictions += 1
             return bid
         return None
+
+    def peek_eviction_order(self, n: int) -> List[Block]:
+        """The next ``n`` blocks ``_evict_one`` would realize, WITHOUT
+        mutating anything — the single source of truth for the scheduler's
+        expected-punishment peek (previously an independent sort that could
+        disagree with the heap's realized order). Replays the lazy-heap
+        discipline against a copy: stale entries are skipped/refreshed
+        exactly as eviction would."""
+        if n <= 0:
+            return []
+        heap = list(self._heap)
+        heapq.heapify(heap)
+        seen: set = set()
+        out: List[Block] = []
+        while heap and len(out) < n:
+            prio, lat, _, bid = heapq.heappop(heap)
+            blk = self.blocks[bid]
+            if blk.ref > 0 or blk.hash is None or bid in seen:
+                continue
+            if (prio, lat) != (self._priority(blk), blk.lat):
+                heapq.heappush(heap, (self._priority(blk), blk.lat,
+                                      next(self._seq), bid))
+                continue
+            seen.add(bid)
+            out.append(blk)
+        return out
 
     def _get_free_block(self) -> Optional[int]:
         if self.free:
@@ -222,6 +508,8 @@ class BlockManager:
                 blk.lat = now
                 if blk.unfinished_owners > 0:
                     blk.unfinished_owners -= 1            # owner came back
+                    if h in req.owner_pins:
+                        req.owner_pins.remove(h)
                 self.metrics.hit_blocks += 1
                 if offline:
                     self.metrics.offline_hit_blocks += 1
@@ -283,9 +571,21 @@ class BlockManager:
                 blk.hash = h
                 blk.task_type = req.task_type if blk.ref <= 1 else blk.task_type
                 self.hash_to_bid[h] = blk.bid
+                if self.host is not None:
+                    # the content was recomputed rather than swapped back:
+                    # the host copy is now redundant — absorb it so the
+                    # tiers stay disjoint, moving its owner pins onto the
+                    # (fresher) device block
+                    hb = self.host.pop(h)
+                    if hb is not None:
+                        blk.unfinished_owners += hb.unfinished_owners
 
     # ------------------------------------------------------------- free
-    def _release_block(self, bid: int, now: float, unfinished: bool = False) -> None:
+    def _release_block(self, bid: int, now: float,
+                       unfinished: bool = False) -> Optional[int]:
+        """Returns the block's hash iff this release pinned an
+        unfinished-owner on it (so the owner can track — and on abort
+        release — its pins)."""
         blk = self.blocks[bid]
         blk.ref -= 1
         blk.lat = now
@@ -300,10 +600,15 @@ class BlockManager:
                 self.free.append(bid)                     # uncommitted: discard
             else:
                 self._push_evictable(blk)
+                if unfinished:
+                    return blk.hash
+        return None
 
     def free_request(self, req: Request, now: float, *, finished: bool) -> None:
         for bid in req.block_ids:
-            self._release_block(bid, now, unfinished=not finished)
+            pinned = self._release_block(bid, now, unfinished=not finished)
+            if pinned is not None:
+                req.owner_pins.append(pinned)
         req.block_ids.clear()
 
     def trim_request(self, req: Request, keep_tokens: int, now: float) -> None:

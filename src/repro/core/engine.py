@@ -45,6 +45,9 @@ class IterationRecord:
     usage: Dict[str, int] = field(default_factory=dict)
     hit_rate: float = 0.0
     threshold_blocks: int = 0
+    swap_in_tokens: int = 0        # KV restored from the host tier (PCIe)
+    swap_out_tokens: int = 0       # KV parked on the host tier (PCIe)
+    host_blocks: int = 0           # host-tier occupancy at iteration end
 
 
 class EngineListener:
@@ -62,6 +65,10 @@ class EngineListener:
     def on_preempt(self, req: Request, t: float) -> None: ...
 
     def on_finish(self, req: Request, t: float) -> None: ...
+
+    def on_swap_in(self, req: Request, n_tokens: int, t: float) -> None: ...
+
+    def on_swap_out(self, n_tokens: int, t: float) -> None: ...
 
 
 @dataclass
@@ -89,6 +96,16 @@ class EngineStats:
             return 0.0
         total = sum(r.offline_tokens for r in self.iterations)
         return total / (self.iterations[-1].t + 1e-9)
+
+    @property
+    def swapped_in_tokens(self) -> int:
+        """Total KV restored host->device instead of recomputed."""
+        return sum(r.swap_in_tokens for r in self.iterations)
+
+    @property
+    def swapped_out_tokens(self) -> int:
+        """Total KV parked device->host instead of dropped."""
+        return sum(r.swap_out_tokens for r in self.iterations)
 
     def slo_attainment(self, kind: str = "ttft") -> float:
         """Fraction of decidable online requests meeting the SLO. Requests
@@ -119,14 +136,16 @@ class EchoEngine:
                  time_model: Optional[TimeModel] = None,
                  clock_model=None, calibrator: Optional[OnlineCalibrator] = None,
                  clock: str = "virtual", seed: int = 0,
-                 max_batch_tokens: int = 2048, max_running: int = 64):
+                 max_batch_tokens: int = 2048, max_running: int = 64,
+                 host_kv_blocks: int = 0):
         self.model = model
         self.policy = policy
         self.clock = clock
         self.pool = OfflinePool(block_size)
         self.bm = BlockManager(num_blocks, block_size,
                                task_aware=policy.task_aware_kv,
-                               rc_provider=self.pool.rc)
+                               rc_provider=self.pool.rc,
+                               host_blocks=host_kv_blocks)
         self.tm = time_model or TimeModel()
         # Ground-truth clock vs. scheduler estimate (§5 calibration loop):
         # `tm` is what the scheduler *believes*; `clock_model` is what the
@@ -151,9 +170,13 @@ class EchoEngine:
                 self.runner = StateRunner(model, params, num_blocks,
                                           block_size, max_pages_per_seq,
                                           chunk_size)
+                # state-snapshot families have no paged KV to stage host-side
+                self.bm.host = None
         self.mem_pred = MemoryPredictor(window=120.0)
         self.now = 0.0
         self.stats = EngineStats()
+        self._pending_swap_out = 0     # staged on an idle tick; next record
+        self._pending_swap_wall = 0.0  # its wall time (wall-clock path)
         self.pending: List[Request] = []       # (arrival_time, rid) ordered
         self.listeners: List[EngineListener] = []
         self._rng = np.random.default_rng(seed)
@@ -200,6 +223,10 @@ class EchoEngine:
             found = True
         if not found:
             return False            # not this engine's request
+        # a previously-preempted request holds unfinished-owner pins on
+        # committed blocks it no longer references (device or host tier) —
+        # the aborted owner never returns, so the pins must drop too
+        self.bm.release_owner_pins(req)
         if self.runner is not None:
             self.runner.release(req.rid)
         req.state = RequestState.ABORTED
@@ -224,6 +251,10 @@ class EchoEngine:
             l.on_token(req, tok, self.now)
         if req.done:
             self.bm.free_request(req, self.now, finished=True)
+            # discharge stale owner pins: a request that was preempted and
+            # then recomputed (rather than swapped back) may still pin the
+            # host copies of blocks it re-registered on device
+            self.bm.release_owner_pins(req)
             if req in self.scheduler.running:
                 self.scheduler.running.remove(req)
             if self.runner is not None:
@@ -279,11 +310,49 @@ class EchoEngine:
         n += sum(1 for r in self.scheduler.running if not r.is_online)
         return n
 
+    def _execute_swaps(self) -> int:
+        """Stage the KV payloads of this iteration's swap decisions. Must
+        run before any runner write: an "out" block's device pages are only
+        intact until the new owner's prefill lands. On the virtual path the
+        journal is drained for accounting alone. Returns swapped-OUT tokens
+        (swap-in tokens are known from the plan)."""
+        events = self.bm.drain_swap_events()
+        out_tokens = 0
+        stage = self.runner is not None and hasattr(self.runner, "read_block")
+        for kind, bid, hb in events:
+            if kind == "out":
+                out_tokens += hb.n_tokens
+                if stage:
+                    hb.payload = self.runner.read_block(bid)
+            elif stage:
+                assert hb.payload is not None, \
+                    f"swap-in of block hash {hb.hash} with no staged payload"
+                self.runner.write_block(bid, hb.payload)
+        return out_tokens
+
     # ------------------------------------------------------------- step
     def step(self) -> Optional[IterationRecord]:
         self._pull_arrivals()
         plan = self.scheduler.schedule(self.now)
-        if plan.n_scheduled == 0:
+        ts0 = time.perf_counter()
+        swap_out_tokens = self._execute_swaps() + self._pending_swap_out
+        swap_wall = time.perf_counter() - ts0 + self._pending_swap_wall
+        self._pending_swap_out = 0
+        self._pending_swap_wall = 0.0
+        swap_in_tokens = plan.swap_in_tokens
+        if plan.n_scheduled == 0 and not plan.swap_ins:
+            # an empty plan can still carry preemptions (victims freed for
+            # an admission that then failed): their runner state and
+            # listener events must not be skipped
+            if plan.preempted:
+                if self.runner is not None:
+                    for req in plan.preempted:
+                        self.runner.release(req.rid)
+                for req in plan.preempted:
+                    for l in self.listeners:
+                        l.on_preempt(req, self.now)
+            self._pending_swap_out = swap_out_tokens
+            self._pending_swap_wall += swap_wall
             # idle: advance to next arrival
             if self.pending:
                 self.now = max(self.now, self.pending[0].arrival_time)
@@ -342,17 +411,33 @@ class EchoEngine:
         spans = [(r.computed_tokens - c, r.computed_tokens)
                  for r, c in plan.prefills]
         dlens = [r.total_len for r in decodes]
-        iter_time = (self.clock_model.batch_time(spans, dlens)
-                     if self.clock == "virtual" else wall)
+        # PCIe swap traffic — BOTH directions — is clocked separately from
+        # compute: the calibrator must see pure compute time or the Eq.6-8
+        # refit would absorb transfer cost into the prefill coefficients.
+        # On the wall path the staging really happened in _execute_swaps,
+        # outside the runner window, so its measured time is added back.
+        swap_time = ((self.clock_model.swap_time(swap_in_tokens)
+                      + self.clock_model.swap_time(swap_out_tokens))
+                     if hasattr(self.clock_model, "swap_time") else 0.0)
+        compute_time = (self.clock_model.batch_time(spans, dlens)
+                        if self.clock == "virtual" else wall)
+        iter_time = compute_time + (swap_time if self.clock == "virtual"
+                                    else swap_wall)
         self.now += iter_time
         if self.calibrator is not None:
             # feed the observed clock back into the scheduler's estimate
-            self.calibrator.observe(self.now, spans, dlens, iter_time)
+            self.calibrator.observe(self.now, spans, dlens, compute_time)
         for req, lg in emissions:               # tokens arrive at iteration end
             self._emit(req, lg)
         for req in plan.preempted:
             for l in self.listeners:
                 l.on_preempt(req, self.now)
+        if swap_out_tokens:
+            for l in self.listeners:
+                l.on_swap_out(swap_out_tokens, self.now)
+        for req, n in plan.swap_ins:
+            for l in self.listeners:
+                l.on_swap_in(req, n, self.now)
 
         # ---- estimator feedback + threshold update (§5.3)
         online_kv = self._online_kv_tokens()
@@ -361,6 +446,11 @@ class EchoEngine:
             self.bm.threshold_blocks = self.mem_pred.threshold_blocks(
                 self.bm.num_blocks, self.bm.block_size, online_kv,
                 self.bm.clean_evictable_count())
+            if self.bm.host is not None:
+                # host-tier headroom for the predicted burst's swap-outs
+                self.bm.host.reserve = self.mem_pred.host_reserve_blocks(
+                    self.bm.block_size, online_kv,
+                    cap_blocks=self.bm.host.capacity)
         rec = IterationRecord(
             t=self.now,
             n_prefill=len(plan.prefills),
@@ -373,6 +463,9 @@ class EchoEngine:
             usage=self.bm.usage_breakdown(),
             hit_rate=self.bm.metrics.hit_rate,
             threshold_blocks=self.bm.threshold_blocks,
+            swap_in_tokens=swap_in_tokens,
+            swap_out_tokens=swap_out_tokens,
+            host_blocks=len(self.bm.host) if self.bm.host is not None else 0,
         )
         self.stats.iterations.append(rec)
         return rec

@@ -20,6 +20,9 @@ from typing import Deque, List, Optional, Sequence, Tuple
 import numpy as np
 
 
+KV_BYTES_PER_TOKEN_8B = 131072   # 32 layers x 8 kv-heads x 128 hd x 2(kv) x fp16
+
+
 @dataclass
 class TimeModel:
     alpha: float = 1e-9      # s / token^2  (prefill quadratic)
@@ -29,15 +32,19 @@ class TimeModel:
     delta: float = 1e-7      # s / token    (decode mean-pool)
     d0: float = 1e-4         # s            (decode floor)
     lam: float = 0.8         # prefill/decode overlap coefficient
+    swap_tok: float = 0.0    # s / token    (host<->device KV over PCIe)
+    swap_floor: float = 0.0  # s            (per-transfer dispatch floor)
     quadratic_prefill: bool = True
 
     @classmethod
     def a100(cls, **overrides) -> "TimeModel":
         """Coefficients of LLaMA-3.1-8B-instruct magnitude on one A100-40G,
         structured per Eq.6-8 — the shared default for virtual-clock serving,
-        cluster simulation, benchmarks, and examples."""
+        cluster simulation, benchmarks, and examples. Swap terms assume the
+        8B KV footprint over PCIe 4.0 x16 (~25 GB/s effective)."""
         kw = dict(alpha=2e-7, beta=1e-4, c=2e-3, gamma=3e-5, delta=3e-5,
-                  d0=2e-3, lam=0.9)
+                  d0=2e-3, lam=0.9,
+                  swap_tok=cls.pcie_swap_tok(25.0), swap_floor=1e-4)
         kw.update(overrides)
         return cls(**kw)
 
@@ -45,11 +52,19 @@ class TimeModel:
     def h100(cls, **overrides) -> "TimeModel":
         """H100-80G magnitude: ~2.5x the A100 FLOPs and ~1.7x its HBM
         bandwidth, so the quadratic attention term shrinks more than the
-        bandwidth-bound decode terms; floors shrink with faster dispatch."""
+        bandwidth-bound decode terms; floors shrink with faster dispatch.
+        PCIe 5.0 x16 doubles the swap bandwidth (~50 GB/s effective)."""
         kw = dict(alpha=8e-8, beta=4e-5, c=1e-3, gamma=1.8e-5, delta=1.8e-5,
-                  d0=1.2e-3, lam=0.92)
+                  d0=1.2e-3, lam=0.92,
+                  swap_tok=cls.pcie_swap_tok(50.0), swap_floor=5e-5)
         kw.update(overrides)
         return cls(**kw)
+
+    @staticmethod
+    def pcie_swap_tok(pcie_gbps: float,
+                      kv_bytes_per_token: int = KV_BYTES_PER_TOKEN_8B) -> float:
+        """Per-token host<->device transfer seconds from link bandwidth."""
+        return kv_bytes_per_token / (pcie_gbps * 1e9)
 
     HW_PROFILES = ("a100", "h100")
 
@@ -96,6 +111,22 @@ class TimeModel:
             return tp + td
         return self.lam * max(tp, td) + (1.0 - self.lam) * min(tp, td)
 
+    def swap_time(self, n_tokens: int) -> float:
+        """Host<->device KV transfer time for ``n_tokens`` over PCIe — the
+        cost side of the swap-in-vs-recompute decision, and the term charged
+        against the SLO budget when a plan carries swap traffic."""
+        if n_tokens <= 0:
+            return 0.0
+        return self.swap_tok * n_tokens + self.swap_floor
+
+    def swap_equiv_tokens(self, n_tokens: int, trips: int = 2) -> float:
+        """A swap expressed in recompute-token units (Eq.4's benefit and
+        punishment are token-denominated): transfer seconds divided by the
+        linear prefill cost per token. Defaults to the full round trip
+        (``trips=2``, out now + in later) — what evicting a future-needed
+        block to the host tier costs instead of its recompute."""
+        return trips * self.swap_time(n_tokens) / max(self.beta, 1e-12)
+
     # ------------------------------------------------------------ fitting
     def fit_prefill(self, samples: Sequence[Tuple]) -> None:
         """samples: (prompt_len, seconds) for single-prefill iterations, or
@@ -139,6 +170,22 @@ class TimeModel:
         coef = np.maximum(coef, 0.0)
         self.gamma, self.delta = float(coef[0]), float(coef[1])
         self.d0 = float(max(min(np.min(ts), max(float(coef[2]), 1e-6)), 1e-6))
+
+    def fit_swap(self, samples: Sequence[Tuple[int, float]]) -> None:
+        """samples: (n_tokens, seconds) for host<->device block transfers —
+        micro-benchmarked like Eq.6-8 (calibration support for the PCIe
+        terms; a fit on real ``jax.device_put`` timings replaces the link
+        presets)."""
+        if len(samples) < 2:
+            return
+        ns = np.array([s[0] for s in samples], np.float64)
+        ts = np.array([s[1] for s in samples], np.float64)
+        basis = np.stack([ns, np.ones_like(ns)], axis=1)
+        coef, *_ = np.linalg.lstsq(basis, ts, rcond=None)
+        coef = np.maximum(coef, 0.0)
+        self.swap_tok = float(coef[0])
+        self.swap_floor = float(max(min(np.min(ts), max(float(coef[1]), 0.0)),
+                                    0.0))
 
     def fit_lambda(self, samples: Sequence[Tuple[float, float, float]]) -> None:
         """samples: (t_prefill_est, t_decode_est, seconds) for mixed batches."""
@@ -189,6 +236,11 @@ class PerturbedTimeModel:
             t *= self.contention_scale
         return t
 
+    def swap_time(self, n_tokens: int) -> float:
+        """PCIe transfers share the systematic drift but not the compute
+        jitter (the link is not the contended resource)."""
+        return self.base.swap_time(n_tokens) * self.scale
+
 
 @dataclass
 class MemoryPredictor:
@@ -220,6 +272,18 @@ class MemoryPredictor:
         inc = max(self.predict() - current_online_tokens, 0.0)
         reserve = max(int(math.ceil(inc / block_size)) - clean_evictable_blocks, 0)
         return max(total_blocks - reserve, int(total_blocks * floor_frac))
+
+    def host_reserve_blocks(self, block_size: int,
+                            current_online_tokens: float = 0.0,
+                            cap_blocks: Optional[int] = None) -> int:
+        """Host-tier headroom (§5.3 applied to the swap layer): slots to
+        keep clear of low-priority swaps so a predicted online burst can
+        always park the KV it preempts instead of losing it to recompute."""
+        inc = max(self.predict() - current_online_tokens, 0.0)
+        reserve = int(math.ceil(inc / block_size))
+        if cap_blocks is not None:
+            reserve = min(reserve, cap_blocks // 2)
+        return reserve
 
 
 @dataclass

@@ -46,9 +46,14 @@ class OfflinePool:
         return req.rid in self._chains
 
     def bucket_of(self, prompt_len: int) -> int:
-        # log2 buckets starting at 256 tokens
-        return min(max(int(math.log2(max(prompt_len, 1) / 256)) + 1, 0)
-                   if prompt_len >= 256 else 0, self.n_buckets - 1)
+        """Log2 length buckets starting at 256 tokens: bucket k holds
+        prompts in [256*2^k, 256*2^(k+1)), with everything under 512 —
+        including sub-256 prompts — in bucket 0 and the last bucket
+        open-ended. (A 256-token prompt used to land in bucket 1, stranding
+        bucket 0 for sub-256 prompts only, against this doc.)"""
+        if prompt_len < 512:
+            return 0
+        return min(int(math.log2(prompt_len / 256)), self.n_buckets - 1)
 
     def _chain(self, req: Request) -> List[int]:
         bs = self.block_size

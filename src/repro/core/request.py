@@ -45,6 +45,10 @@ class Request:
     block_ids: List[int] = field(default_factory=list)
     n_preemptions: int = 0
     recomputed_tokens: int = 0             # prefill tokens re-done after preemption
+    swapped_in_tokens: int = 0             # prefill tokens restored from host KV
+    owner_pins: List[int] = field(default_factory=list)
+    # block hashes carrying this request's unfinished-owner pin (set when a
+    # preemption releases its committed blocks; cleared on return or abort)
 
     # metrics
     first_token_time: Optional[float] = None

@@ -27,9 +27,14 @@ class Plan:
     prefills: List[Tuple[Request, int]] = field(default_factory=list)  # (req, chunk)
     decodes: List[Request] = field(default_factory=list)
     preempted: List[Request] = field(default_factory=list)
+    swap_ins: List[Tuple[Request, int]] = field(default_factory=list)  # (req, tokens)
     est_time: float = 0.0
     benefit: float = 0.0
     punishment: float = 0.0
+
+    @property
+    def swap_in_tokens(self) -> int:
+        return sum(n for _, n in self.swap_ins)
 
     @property
     def reward(self) -> float:
@@ -47,7 +52,8 @@ class _Candidate:
     """A tentative offline admission evaluated by the plan selector."""
     req: Request
     chunk: int
-    cached: int
+    cached: int                 # reusable prefix: device hits + host swap-in
+    host_take: int              # tokens of ``cached`` restored over PCIe
     new_blocks: int
     punishment: float
     d_benefit: float
@@ -99,11 +105,48 @@ class Scheduler:
                                respect_threshold=respect_threshold)
         return res is not None
 
+    def _swap_in_worthwhile(self, start: int, n_tokens: int) -> bool:
+        """The per-candidate transfer-vs-recompute decision: restoring
+        ``n_tokens`` of KV at context depth ``start`` over PCIe must beat
+        re-prefilling the same span (Eq.6 increment). With the default
+        coefficients swap wins by ~20x on linear cost — but a deep-context
+        span's quadratic term can tip either way, so it is priced, not
+        assumed."""
+        return (self.tm.swap_time(n_tokens)
+                < self.tm.prefill_time([(start, start + n_tokens)]))
+
+    def _try_swap_in(self, req: Request, now: float, limit: int,
+                     plan: Optional[Plan], respect_threshold: bool) -> int:
+        """Restore a leading host-resident prefix instead of recomputing it.
+        Returns tokens restored (0 if the tier is cold, the transfer would
+        lose to recompute, or memory is exhausted). The restored span is
+        charged as ``swap_time`` on the plan — it competes for the same SLO
+        budget as compute."""
+        if plan is None or self.bm.host is None:
+            return 0
+        bs = self.bm.block_size
+        avail = self.bm.probe_host_prefix(req.full_tokens, req.computed_tokens)
+        # keep >= 1 token to compute (logits for the next token), block-aligned
+        avail = min(avail, limit - 1 - req.computed_tokens) // bs * bs
+        if avail < bs:
+            return 0
+        if not self._swap_in_worthwhile(req.computed_tokens, avail):
+            return 0
+        got = self.bm.swap_in(req, req.full_tokens, now, avail,
+                              respect_threshold=respect_threshold)
+        if got > 0:
+            plan.swap_ins.append((req, got))
+            req.computed_tokens += got
+            req.swapped_in_tokens += got
+        return got
+
     def _plan_prefill_chunk(self, req: Request, now: float,
-                            respect_threshold: bool) -> Optional[int]:
+                            respect_threshold: bool,
+                            plan: Optional[Plan] = None) -> Optional[int]:
         """Allocate blocks for the next prefill chunk, skipping over blocks
         that turn out cached (leader/follower stagger: a same-prefix peer
-        admitted one chunk behind hits every block its leader committed).
+        admitted one chunk behind hits every block its leader committed) and
+        swapping in host-resident blocks when the transfer beats recompute.
         Returns the chunk length to compute (>=1) or None on memory failure.
         """
         limit = req.prefill_target_len
@@ -111,8 +154,11 @@ class Scheduler:
         while True:
             if req.computed_tokens >= limit:
                 return 0
-            target = min(req.computed_tokens + self.chunk_size, limit)
             aligned = req.computed_tokens == len(req.block_ids) * bs
+            if aligned and self._try_swap_in(req, now, limit, plan,
+                                             respect_threshold) > 0:
+                continue
+            target = min(req.computed_tokens + self.chunk_size, limit)
             hits = self.bm.allocate(req, target, req.full_tokens, now,
                                     respect_threshold=respect_threshold)
             if hits is None:
@@ -162,6 +208,10 @@ class Scheduler:
         plan.preempted.append(victim)
         plan.decodes = [r for r in plan.decodes if r is not victim]
         plan.prefills = [(r, c) for (r, c) in plan.prefills if r is not victim]
+        # plan.swap_ins deliberately keeps the victim's entries: the PCIe
+        # transfer already executed (blocks restored, journal staged), so
+        # its time must still be charged; the restored blocks stay cached
+        # for the victim's return
         self.pool.add(victim)                     # recompute mode: back to pool
 
     def _preempt_one_offline(self, now: float, plan: Plan) -> bool:
@@ -207,19 +257,26 @@ class Scheduler:
         return budget * self.slo_slack_factor
 
     def _expected_punishment(self, n_evictions: int) -> float:
-        """Peek the eviction order; sum future-needed tokens of the first n."""
+        """Expected cost (in recompute-token units) of the next n evictions.
+
+        Uses ``BlockManager.peek_eviction_order`` — the same lazy-heap
+        discipline eviction realizes — instead of an independent sort that
+        could disagree with it. A future-needed block the host tier will
+        absorb is punished at its (much cheaper) swap-round-trip equivalent,
+        never more than the full recompute it replaces."""
         if n_evictions <= 0:
             return 0.0
         if not self.policy.task_aware_kv and not self.policy.kv_aware_sched:
             return 0.0
-        cands = [b for b in self.bm.blocks if b.ref == 0 and b.hash is not None]
-        cands.sort(key=lambda b: (self.bm._priority(b), b.lat))
-        cands = cands[:n_evictions]
         pun = 0.0
-        for b in cands:
+        for b in self.bm.peek_eviction_order(n_evictions):
             rc = self.bm.rc_provider(b.hash) + b.unfinished_owners
             if rc > 0:
-                pun += b.n_tokens
+                if self.bm.would_swap(self.bm._priority(b)):
+                    pun += min(self.tm.swap_equiv_tokens(b.n_tokens),
+                               float(b.n_tokens))
+                else:
+                    pun += b.n_tokens
         return pun
 
     def _plan_tokens(self, plan: Plan) -> int:
@@ -229,7 +286,15 @@ class Scheduler:
         spans = [(r.computed_tokens, r.computed_tokens + c)
                  for r, c in plan.prefills]
         dlens = [r.total_len + 1 for r in plan.decodes]
-        return self.tm.batch_time(spans, dlens)
+        t = self.tm.batch_time(spans, dlens)
+        # PCIe traffic competes for the SLO budget — both the planned
+        # swap-ins and the swap-outs this scheduling pass already journaled
+        # (the engine clocks both directions)
+        out_tokens = self.bm.pending_swap_out_tokens() if self.bm.host else 0
+        if plan.swap_ins or out_tokens:
+            t += self.tm.swap_time(plan.swap_in_tokens)
+            t += self.tm.swap_time(out_tokens)
+        return t
 
     # ------------------------------------------------------------- schedule
     def schedule(self, now: float) -> Plan:
@@ -244,11 +309,12 @@ class Scheduler:
                     plan.decodes.append(req)
             else:
                 chunk = self._plan_prefill_chunk(
-                    req, now, respect_threshold=not req.is_online)
+                    req, now, respect_threshold=not req.is_online, plan=plan)
                 while chunk is None and req.is_online and \
                         self._preempt_one_offline(now, plan):
                     chunk = self._plan_prefill_chunk(req, now,
-                                                     respect_threshold=False)
+                                                     respect_threshold=False,
+                                                     plan=plan)
                 if chunk is None:
                     if req.task_type == TaskType.OFFLINE:
                         self._preempt_request(req, now, plan)
@@ -268,10 +334,12 @@ class Scheduler:
                     break
                 continue
             req.admit()
-            chunk = self._plan_prefill_chunk(req, now, respect_threshold=False)
+            chunk = self._plan_prefill_chunk(req, now, respect_threshold=False,
+                                             plan=plan)
             while chunk is None and self._preempt_one_offline(now, plan):
                 chunk = self._plan_prefill_chunk(req, now,
-                                                 respect_threshold=False)
+                                                 respect_threshold=False,
+                                                 plan=plan)
             if chunk is None:
                 req.state = RequestState.WAITING
                 self.bm.free_request(req, now, finished=False)
@@ -282,7 +350,7 @@ class Scheduler:
             # (the queued request's own TTFT slack covers the wait)
             if self.policy.use_estimator and chunk > 0 and plan.n_scheduled:
                 trial = Plan(prefills=plan.prefills + [(req, chunk)],
-                             decodes=plan.decodes)
+                             decodes=plan.decodes, swap_ins=plan.swap_ins)
                 if self._estimate(trial) > self._slo_budget(now, trial):
                     req.state = RequestState.WAITING
                     self.bm.free_request(req, now, finished=False)
@@ -361,8 +429,19 @@ class Scheduler:
 
     def _evaluate_candidate(self, req: Request, plan: Plan) -> _Candidate:
         tokens = req.full_tokens
-        cached = self.bm.probe_prefix(tokens)
-        cached = min(cached, max(len(tokens) - 1, 0))
+        bs = self.bm.block_size
+        dev_cached = self.bm.probe_prefix(tokens)
+        # swap-in-vs-recompute, priced per candidate: a host-resident prefix
+        # extends the reusable prefix at PCIe cost instead of compute cost
+        host_take = 0
+        host_avail = self.bm.probe_host_prefix(tokens, dev_cached)
+        if host_avail:
+            cap = max(len(tokens) - 1 - dev_cached, 0) // bs * bs
+            host_take = min(host_avail, cap)
+            if host_take and not self._swap_in_worthwhile(dev_cached,
+                                                          host_take):
+                host_take = 0
+        cached = min(dev_cached + host_take, max(len(tokens) - 1, 0))
         chunk = min(len(tokens) - cached, self.chunk_size)
         new_blocks = self._blocks_for(req, cached + chunk)
         free = self.bm.free_blocks
@@ -373,10 +452,11 @@ class Scheduler:
         dlens = [r.total_len + 1 for r in plan.decodes]
         t0 = self.tm.batch_time(base_spans, dlens)
         t1 = self.tm.batch_time(base_spans + [(cached, cached + chunk)], dlens)
+        d_time = t1 - t0 + self.tm.swap_time(host_take)
         # benefit counts the *progress* incl. reused prefix (recompute avoided)
         d_benefit = float(chunk + cached) if req.computed_tokens == 0 else float(chunk)
-        return _Candidate(req, chunk, cached, new_blocks, pun, d_benefit,
-                          t1 - t0)
+        return _Candidate(req, chunk, cached, host_take, new_blocks, pun,
+                          d_benefit, d_time)
 
     def _first_hash(self, req: Request) -> Optional[int]:
         from repro.core.block_manager import chain_hash
@@ -418,16 +498,19 @@ class Scheduler:
                 cands.sort(key=lambda c: -c.score())
             best = cands[0]
             req = best.req
-            # constraints: memory (threshold-respecting) + SLO
+            # constraints: memory (threshold-respecting) + SLO — including
+            # the PCIe time of any swap-in the candidate's plan relies on
             trial_spans = ([(r.computed_tokens, r.computed_tokens + c)
                             for r, c in plan.prefills]
                            + [(best.cached, best.cached + best.chunk)])
             dlens = [r.total_len + 1 for r in plan.decodes]
-            t_new = self.tm.batch_time(trial_spans, dlens)
+            t_new = (self.tm.batch_time(trial_spans, dlens)
+                     + self.tm.swap_time(plan.swap_in_tokens + best.host_take))
             if self.policy.use_estimator and t_new > budget:
                 break
             req.admit()
-            chunk = self._plan_prefill_chunk(req, now, respect_threshold=True)
+            chunk = self._plan_prefill_chunk(req, now, respect_threshold=True,
+                                             plan=plan)
             if chunk is None:
                 req.state = RequestState.WAITING
                 self.bm.free_request(req, now, finished=False)

@@ -26,6 +26,12 @@ online refitting that closes the gap:
 Both paths drive the workload through the one ``EchoService`` facade
 (``repro.serving``); ``--max-online-queue`` / ``--slo-shed-factor`` /
 ``--offline-cap`` turn on its admission backpressure.
+
+KV tiering: ``--host-kv-gb`` attaches a host-memory swap tier (per replica
+on the cluster path) sized in GB, ``--pcie-gbps`` sets the transfer-term
+bandwidth, ``--no-swap`` forces the recompute-only baseline:
+
+  PYTHONPATH=src python -m repro.launch.serve --host-kv-gb 4 --pcie-gbps 25
 """
 from __future__ import annotations
 
@@ -36,6 +42,7 @@ import jax
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import (ALL_POLICIES, ECHO, SLO, EchoEngine, TimeModel)
+from repro.core.estimator import KV_BYTES_PER_TOKEN_8B
 from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
 from repro.models import Model
 from repro.serving import AdmissionConfig, EchoService
@@ -43,6 +50,23 @@ from repro.serving import AdmissionConfig, EchoService
 POLICY_BY_NAME = {p.name: p for p in ALL_POLICIES}
 
 DEFAULT_ARCH = "qwen3-4b"
+
+
+def kv_bytes_per_token(cfg=None) -> int:
+    """KV footprint per token: from the served config when there is one,
+    else the 8B-magnitude default the virtual-clock paths assume."""
+    if cfg is None:
+        return KV_BYTES_PER_TOKEN_8B
+    n_attn = sum(1 for k in cfg.attn_layers if k in ("attn", "moe"))
+    return max(n_attn * cfg.num_kv_heads * cfg.head_dim * 2 * 2, 1)  # k+v, fp16
+
+
+def host_kv_blocks(args, cfg=None, block_size: int = 16) -> int:
+    """--host-kv-gb translated to host-tier blocks (0 with --no-swap)."""
+    if args.no_swap or args.host_kv_gb <= 0:
+        return 0
+    per_block = kv_bytes_per_token(cfg) * block_size
+    return max(int(args.host_kv_gb * 1e9 / per_block), 1)
 
 
 def admission_config(args):
@@ -73,6 +97,11 @@ def print_report(service: EchoService, stats, online, offline) -> None:
         print(f"router: affinity hits {router.affinity_hits}/"
               f"{router.offline_dispatched}  "
               f"stolen {router.stolen_requests}")
+    if service.live.swap_ins or service.live.swap_outs:
+        print(f"kv swap: in {service.live.swapped_in_tokens} tok "
+              f"({service.live.swap_ins} events)  "
+              f"out {service.live.swapped_out_tokens} tok "
+              f"({service.live.swap_outs} events)")
     engines = service.backend.engines()
     for i, eng in enumerate(engines):
         tag = f"  replica {i}:" if len(engines) > 1 else "engine:"
@@ -81,6 +110,10 @@ def print_report(service: EchoService, stats, online, offline) -> None:
                 f"evictions {eng.bm.metrics.evictions}  "
                 f"punished tokens {eng.bm.metrics.punished_tokens}  "
                 f"t={eng.now:.1f}s")
+        if eng.bm.host is not None:
+            line += (f"  host {len(eng.bm.host)}/{eng.bm.host.capacity} blk"
+                     f"  swap in/out {eng.bm.metrics.swapped_in_tokens}"
+                     f"/{eng.bm.metrics.swapped_out_tokens} tok")
         if router is not None:
             line += f"  online served {router.per_replica_online.get(i, 0)}"
         if eng.calibrator is not None:
@@ -97,7 +130,8 @@ def resolve_policy(args):
     return policy
 
 
-def clock_models(args, *, quadratic_prefill: bool = True):
+def clock_models(args, *, quadratic_prefill: bool = True,
+                 swap_tok: float = None):
     """Ground-truth clocks from --hw-profile/--hw-drift/--hw-jitter; None
     when they match the stock estimate (classic perfect-clock serving)."""
     names = [n.strip() for n in args.hw_profile.split(",") if n.strip()]
@@ -106,7 +140,10 @@ def clock_models(args, *, quadratic_prefill: bool = True):
         return None
     out = []
     for i, name in enumerate(names):
-        base = TimeModel.preset(name, quadratic_prefill=quadratic_prefill)
+        kw = dict(quadratic_prefill=quadratic_prefill)
+        if swap_tok is not None:
+            kw["swap_tok"] = swap_tok
+        base = TimeModel.preset(name, **kw)
         if perturbed:
             out.append(base.perturbed(scale=args.hw_drift,
                                       jitter=args.hw_jitter,
@@ -163,7 +200,8 @@ def serve_cluster(args) -> None:
     from repro.data import default_tenants, make_multi_tenant_workload
 
     policy = resolve_policy(args)
-    tm = TimeModel.a100()
+    swap_tok = TimeModel.pcie_swap_tok(args.pcie_gbps)
+    tm = TimeModel.a100(swap_tok=swap_tok)
     base = default_tenants(args.tenants)
     scale = args.online_rate / sum(t.online_rate for t in base)
     tenants = tuple(dataclasses.replace(t, online_rate=t.online_rate * scale,
@@ -175,7 +213,9 @@ def serve_cluster(args) -> None:
     sim = ClusterSimulator(args.replicas, policy,
                            router_policy=args.router,
                            num_blocks=args.num_blocks,
-                           time_model=tm, clock_models=clock_models(args),
+                           time_model=tm,
+                           clock_models=clock_models(args, swap_tok=swap_tok),
+                           host_kv_blocks=host_kv_blocks(args),
                            seed=args.seed)
     service = EchoService(sim, admission=admission_config(args))
     stats = service.drive(online + offline, until_time=args.duration * 4)
@@ -225,6 +265,17 @@ def main() -> None:
     ap.add_argument("--offline-cap", type=int, default=None,
                     help="admission control: soft cap on the offline "
                          "backlog; excess work is deferred, not dropped")
+    ap.add_argument("--host-kv-gb", type=float, default=0.0,
+                    help="host-memory KV swap tier per replica, in GB: "
+                         "evicted blocks with future reuse are parked on "
+                         "the host and restored over PCIe instead of "
+                         "recomputed (0 = recompute-only, the old behavior)")
+    ap.add_argument("--pcie-gbps", type=float, default=25.0,
+                    help="effective host<->device bandwidth for the swap "
+                         "tier's transfer-time terms (25 ~ PCIe 4.0 x16)")
+    ap.add_argument("--no-swap", action="store_true",
+                    help="disable the host swap tier even with "
+                         "--host-kv-gb set (recompute-only baseline)")
     args = ap.parse_args()
 
     if args.replicas > 1:
@@ -241,8 +292,9 @@ def main() -> None:
     policy = resolve_policy(args)
 
     quad = cfg.family not in ("ssm", "hybrid")
-    tm = TimeModel.a100(quadratic_prefill=quad)
-    clocks = clock_models(args, quadratic_prefill=quad)
+    swap_tok = TimeModel.pcie_swap_tok(args.pcie_gbps, kv_bytes_per_token(cfg))
+    tm = TimeModel.a100(quadratic_prefill=quad, swap_tok=swap_tok)
+    clocks = clock_models(args, quadratic_prefill=quad, swap_tok=swap_tok)
     if clocks and len(clocks) > 1:
         print(f"warning: --replicas 1 uses only the first --hw-profile "
               f"({args.hw_profile.split(',')[0].strip()}); extra profiles "
@@ -260,7 +312,8 @@ def main() -> None:
     eng = EchoEngine(model, params, policy, num_blocks=args.num_blocks,
                      block_size=16, chunk_size=64,
                      max_pages_per_seq=32, time_model=tm,
-                     clock_model=clocks[0] if clocks else None)
+                     clock_model=clocks[0] if clocks else None,
+                     host_kv_blocks=host_kv_blocks(args, cfg))
     service = EchoService(eng, admission=admission_config(args))
     stats = service.drive(online + offline, max_iters=100_000,
                           until_time=args.duration * 4)

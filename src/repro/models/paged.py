@@ -118,6 +118,10 @@ class PagedRunner:
             self.pages.append(seg)
         self._prefill_jit = jax.jit(self._prefill_impl)
         self._decode_jit = jax.jit(self._decode_impl)
+        # donate the pool so XLA updates the page in place instead of
+        # copying the whole pool per restored block
+        self._write_block_jit = jax.jit(self._write_block_impl,
+                                        donate_argnums=0)
 
     # ------------------------------------------------------------- impls
     def _rope_for(self, positions):
@@ -184,6 +188,42 @@ class PagedRunner:
     def release(self, rid: int) -> None:
         """No per-request device state beyond the pages (owned by the
         BlockManager); nothing to drop."""
+
+    # ------------------------------------------------------- host KV swap
+    def read_block(self, bid: int):
+        """Device->host staging of one KV page across every layer: the
+        swap-out half of the tiered cache. Returns a nested
+        [segment][unit]{"k","v"} structure of host numpy arrays, shape
+        (n_layers, page_size, H, hd) each."""
+        out = []
+        for seg in self.pages:
+            out.append(tuple(
+                {name: np.asarray(jax.device_get(pg[name][:, bid]))
+                 for name in ("k", "v")} for pg in seg))
+        return out
+
+    def _write_block_impl(self, pages, bid, payload):
+        new_pages = []
+        for seg, seg_payload in zip(pages, payload):
+            new_seg = []
+            for pg, blk in zip(seg, seg_payload):
+                new_seg.append({
+                    name: pg[name].at[:, bid].set(
+                        blk[name].astype(pg[name].dtype))
+                    for name in ("k", "v")})
+            new_pages.append(tuple(new_seg))
+        return new_pages
+
+    def write_block(self, bid: int, payload) -> None:
+        """Host->device restore of one KV page (the swap-in half): stages
+        the payload via ``jax.device_put`` and scatters it into the pool at
+        ``bid`` inside a donated jit, so the update happens in place — the
+        block table indirection makes the new bid transparent to
+        attention."""
+        staged = jax.tree_util.tree_map(
+            lambda a: jax.device_put(jnp.asarray(a)), payload)
+        self.pages = self._write_block_jit(self.pages, jnp.int32(bid),
+                                           staged)
 
     # ------------------------------------------------------------- API
     def prefill_chunk(self, token_chunk: Sequence[int], ctx_len: int,

@@ -53,8 +53,11 @@ class AdmissionController:
     def __init__(self, config: AdmissionConfig):
         self.config = config
         self.deferred: Deque[RequestHandle] = deque()
+        self._deferred_rids: set = set()   # live membership, O(1) cancel
+        self._tombstones: set = set()      # rids cancelled while deferred
         self.shed_online = 0
         self.deferred_total = 0
+        self.requeued_total = 0
 
     # ------------------------------------------------------------- verdict
     def verdict(self, backend, handle: RequestHandle) -> str:
@@ -74,30 +77,60 @@ class AdmissionController:
         if c.offline_pool_cap is not None and \
                 backend.offline_backlog() >= c.offline_pool_cap:
             self.deferred.append(handle)
+            self._deferred_rids.add(handle.rid)
             self.deferred_total += 1
             return DEFER
         return ADMIT
 
     # ------------------------------------------------------------- pumping
-    def pump(self, backend) -> int:
+    def pump(self, backend, events=None) -> int:
         """Feed deferred offline work into the backend while its backlog is
-        under the soft cap. Called by the service before every step."""
-        c = self.config
+        under the soft cap. Called by the service before every step.
+
+        Each resubmission re-runs the admission verdict (the gate may have
+        tightened, or the handle may have gone terminal while deferred —
+        blindly submitting an aborted handle would resurrect it) and emits a
+        ``requeue`` event so LiveMetrics sees every deferred->queued
+        transition. Cancelled handles are tombstoned by ``cancel`` and
+        dropped lazily here, keeping cancellation O(1)."""
         fed = 0
-        while self.deferred and (c.offline_pool_cap is None or
-                                 backend.offline_backlog() <
-                                 c.offline_pool_cap):
+        while self.deferred:
             handle = self.deferred.popleft()
+            if handle.rid in self._tombstones:       # cancelled while queued
+                self._tombstones.discard(handle.rid)
+                continue
+            self._deferred_rids.discard(handle.rid)
+            if handle.done:                          # aborted/terminal: drop
+                handle._deferred = False
+                continue
+            verdict = self.verdict(backend, handle)
+            if verdict == DEFER:
+                # still capped: verdict() re-appended at the TAIL; restore
+                # the handle to the head so a saturated cap does not rotate
+                # the queue (deferred work must drain FIFO)
+                self.deferred.pop()
+                self.deferred.appendleft(handle)
+                self.deferred_total -= 1             # not a new deferral
+                break
             handle._deferred = False
-            backend.submit(handle.request)
-            fed += 1
+            if verdict == ADMIT:
+                backend.submit(handle.request)
+                self.requeued_total += 1
+                if events is not None:
+                    events.emit("requeue", handle)
+                fed += 1
+            else:                                    # SHED (gate tightened)
+                handle._shed = True
+                if events is not None:
+                    events.emit("shed", handle)
         return fed
 
     def cancel(self, handle: RequestHandle) -> bool:
-        """Drop a still-deferred handle from the overflow queue."""
-        try:
-            self.deferred.remove(handle)
-        except ValueError:
+        """Drop a still-deferred handle from the overflow queue — O(1) via a
+        tombstone; the deque entry is skipped on the next ``pump``."""
+        if handle.rid not in self._deferred_rids:
             return False
+        self._deferred_rids.discard(handle.rid)
+        self._tombstones.add(handle.rid)
         handle._deferred = False
         return True

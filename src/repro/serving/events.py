@@ -9,17 +9,31 @@ finished counts) incrementally from events, matching the post-hoc
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 from repro.serving.handle import RequestHandle, TokenEvent
 
 
+@dataclass(frozen=True)
+class SwapEvent:
+    """KV traffic between the device cache and the host tier. Swap-ins
+    belong to the request whose prefix was restored; swap-outs are
+    hash-level (the evicted block may serve many future requests), so
+    ``handle`` is None for them."""
+    tokens: int
+    t: float
+    handle: Optional[RequestHandle] = None
+
+
 class EventBus:
     """Named-event subscriptions. ``token``/``first_token`` callbacks get a
-    ``TokenEvent``; ``finish``/``preempt``/``abort``/``shed`` callbacks get
-    the ``RequestHandle``. Callbacks run synchronously at iteration end."""
+    ``TokenEvent``; ``finish``/``preempt``/``abort``/``shed``/``requeue``
+    callbacks get the ``RequestHandle``; ``swap_in``/``swap_out`` get a
+    ``SwapEvent``. Callbacks run synchronously at iteration end."""
 
-    EVENTS = ("token", "first_token", "finish", "preempt", "abort", "shed")
+    EVENTS = ("token", "first_token", "finish", "preempt", "abort", "shed",
+              "requeue", "swap_in", "swap_out")
 
     def __init__(self):
         self._subs: Dict[str, List[Callable]] = {e: [] for e in self.EVENTS}
@@ -53,6 +67,16 @@ class EventBus:
     def on_shed(self, cb: Callable[[RequestHandle], None]) -> Callable:
         return self.subscribe("shed", cb)
 
+    def on_requeue(self, cb: Callable[[RequestHandle], None]) -> Callable:
+        """Deferred offline work re-admitted from the overflow queue."""
+        return self.subscribe("requeue", cb)
+
+    def on_swap_in(self, cb: Callable[[SwapEvent], None]) -> Callable:
+        return self.subscribe("swap_in", cb)
+
+    def on_swap_out(self, cb: Callable[[SwapEvent], None]) -> Callable:
+        return self.subscribe("swap_out", cb)
+
     # emission ------------------------------------------------------------
     def emit(self, event: str, payload) -> None:
         for cb in list(self._subs[event]):
@@ -76,6 +100,11 @@ class LiveMetrics:
         self.aborted = 0
         self.shed = 0
         self.preemptions = 0
+        self.requeued = 0                   # deferred -> queued transitions
+        self.swap_ins = 0
+        self.swap_outs = 0
+        self.swapped_in_tokens = 0          # recompute avoided via host KV
+        self.swapped_out_tokens = 0
         self.completed_offline_tokens = 0   # prompt + generated, on finish
         self.last_offline_finish_t: Optional[float] = None
         self._slo = {"ttft": [0, 0], "tpot": [0, 0]}    # kind -> [ok, n]
@@ -85,6 +114,9 @@ class LiveMetrics:
         bus.on_preempt(self._preempt)
         bus.on_abort(self._abort)
         bus.on_shed(self._shed_cb)
+        bus.on_requeue(self._requeue)
+        bus.on_swap_in(self._swap_in)
+        bus.on_swap_out(self._swap_out)
 
     # ------------------------------------------------------------- handlers
     def _token(self, ev: TokenEvent) -> None:
@@ -121,6 +153,17 @@ class LiveMetrics:
 
     def _shed_cb(self, handle: RequestHandle) -> None:
         self.shed += 1
+
+    def _requeue(self, handle: RequestHandle) -> None:
+        self.requeued += 1
+
+    def _swap_in(self, ev: SwapEvent) -> None:
+        self.swap_ins += 1
+        self.swapped_in_tokens += ev.tokens
+
+    def _swap_out(self, ev: SwapEvent) -> None:
+        self.swap_outs += 1
+        self.swapped_out_tokens += ev.tokens
 
     # ------------------------------------------------------------- queries
     def slo_attainment(self, kind: str = "ttft") -> float:

@@ -28,7 +28,7 @@ from repro.core.request import SLO, Request, TaskType
 from repro.serving.admission import (ADMIT, DEFER, SHED, AdmissionConfig,
                                      AdmissionController)
 from repro.serving.backends import make_backend
-from repro.serving.events import EventBus, LiveMetrics
+from repro.serving.events import EventBus, LiveMetrics, SwapEvent
 from repro.serving.handle import RequestHandle, TokenEvent
 
 
@@ -46,6 +46,12 @@ class _ServiceListener(EngineListener):
 
     def on_finish(self, req: Request, t: float) -> None:
         self.service._on_finish(req, t)
+
+    def on_swap_in(self, req: Request, n_tokens: int, t: float) -> None:
+        self.service._on_swap_in(req, n_tokens, t)
+
+    def on_swap_out(self, n_tokens: int, t: float) -> None:
+        self.service._on_swap_out(n_tokens, t)
 
 
 class EchoService:
@@ -175,7 +181,7 @@ class EchoService:
         possible."""
         if self.admission is not None:
             self._release_arrivals()
-            self.admission.pump(self.backend)
+            self.admission.pump(self.backend, self.events)
         if self.backend.step(until_time):
             return True
         # backend idle, but future arrivals are still held at the front
@@ -186,7 +192,7 @@ class EchoService:
         while self._held:
             self._release_arrivals(force_one=True)
             if self.admission is not None:
-                self.admission.pump(self.backend)
+                self.admission.pump(self.backend, self.events)
             if self.backend.step(until_time):
                 return True
         return False
@@ -236,6 +242,13 @@ class EchoService:
         handle = self._handle_for(req)
         if handle is not None:
             self.events.emit("preempt", handle)
+
+    def _on_swap_in(self, req: Request, n_tokens: int, t: float) -> None:
+        self.events.emit("swap_in", SwapEvent(tokens=n_tokens, t=t,
+                                              handle=self._handle_for(req)))
+
+    def _on_swap_out(self, n_tokens: int, t: float) -> None:
+        self.events.emit("swap_out", SwapEvent(tokens=n_tokens, t=t))
 
     def _on_finish(self, req: Request, t: float) -> None:
         handle = self._handle_for(req)

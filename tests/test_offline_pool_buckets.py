@@ -1,0 +1,43 @@
+"""OfflinePool length bucketing: the documented boundary (buckets start at
+256 tokens, bucket k = [256*2^k, 256*2^(k+1))) plus monotonicity/coverage
+properties. Kept separate from test_radix_pool.py so the deterministic
+boundary checks run even where hypothesis is unavailable."""
+import pytest
+
+from repro.core.radix_pool import OfflinePool
+
+
+def test_bucket_boundary_matches_docstring():
+    """Regression (satellite 3): a 256-token prompt used to land in bucket
+    1, stranding bucket 0 for sub-256 prompts against the docstring."""
+    pool = OfflinePool(block_size=16, n_buckets=6)
+    assert pool.bucket_of(1) == 0
+    assert pool.bucket_of(255) == 0
+    assert pool.bucket_of(256) == 0, "doc: buckets start at 256"
+    assert pool.bucket_of(511) == 0
+    assert pool.bucket_of(512) == 1
+    assert pool.bucket_of(1023) == 1
+    assert pool.bucket_of(1024) == 2
+    for k in range(1, 6):
+        assert pool.bucket_of(256 * (1 << k)) == min(k, pool.n_buckets - 1)
+    # last bucket is open-ended
+    assert pool.bucket_of(10 ** 9) == pool.n_buckets - 1
+
+
+def test_bucketing_property_monotone_and_total():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(0, 1 << 24), st.integers(0, 1 << 24),
+           st.integers(2, 8))
+    def prop(a, b, n_buckets):
+        pool = OfflinePool(block_size=16, n_buckets=n_buckets)
+        ba, bb = pool.bucket_of(a), pool.bucket_of(b)
+        # total: every length maps to a valid bucket
+        assert 0 <= ba < n_buckets and 0 <= bb < n_buckets
+        # monotone: longer prompts never map to a smaller bucket
+        if a <= b:
+            assert ba <= bb
+
+    prop()

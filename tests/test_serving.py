@@ -49,6 +49,27 @@ def assert_no_block_leaks(engine):
     n_cached = engine.bm.cached_blocks
     n_running = engine.bm.running_blocks
     assert n_free + n_cached + n_running == engine.bm.num_blocks
+    # host tier, when present, must stay within capacity and never hold a
+    # hash that is also device-resident (the device copy shadows it)
+    host = engine.bm.host
+    if host is not None:
+        assert len(host) <= host.capacity
+        for h in host.blocks:
+            assert h not in engine.bm.hash_to_bid, \
+                f"hash {h} resident on BOTH tiers"
+
+
+def assert_no_owner_pin_leaks(engine):
+    """On a drained engine (every request terminal) no block on either tier
+    may still carry an unfinished-owner pin — preempted owners either came
+    back (pin consumed) or went terminal (pin released)."""
+    for b in engine.bm.blocks:
+        assert b.unfinished_owners == 0, \
+            f"device block {b.bid} pinned by a dead owner"
+    if engine.bm.host is not None:
+        for hb in engine.bm.host.blocks.values():
+            assert hb.unfinished_owners == 0, \
+                f"host block hash {hb.hash} pinned by a dead owner"
 
 
 # --------------------------------------------------------------- equivalence
@@ -319,6 +340,83 @@ def test_abort_deferred_offline_request():
     service.run()
     assert h1.status is HandleStatus.FINISHED
     assert h2.result().tokens == []
+
+
+def test_pump_never_resubmits_aborted_deferred_handle():
+    """Regression: ``pump`` used to resubmit deferred handles blindly — a
+    handle aborted while deferred could be resurrected into the backend."""
+    service = EchoService(
+        _engine(), admission=AdmissionConfig(offline_pool_cap=1))
+    hs = [service.submit(tuple(range(i * 37, i * 37 + 40)),
+                         task_type="offline", max_new_tokens=3)
+          for i in range(4)]
+    deferred = [h for h in hs if h._deferred]
+    assert len(deferred) == 3
+    victim = deferred[1]
+    # simulate a handle that went terminal while still in the overflow
+    # queue without the controller hearing about it (no cancel() call)
+    victim._aborted = True
+    kept = [h for h in hs if h is not victim]
+    service.run()
+    assert all(h.status is HandleStatus.FINISHED for h in kept)
+    assert victim.request.state not in (RequestState.FINISHED,
+                                        RequestState.RUNNING)
+    assert victim.request not in service.engine.pool
+
+
+def test_pump_emits_requeue_events():
+    """Every deferred->queued transition must be observable: LiveMetrics
+    used to undercount them because pump bypassed the event bus."""
+    service = EchoService(
+        _engine(), admission=AdmissionConfig(offline_pool_cap=1))
+    requeued = []
+    service.events.on_requeue(lambda hd: requeued.append(hd.rid))
+    hs = [service.submit(tuple(range(i * 37, i * 37 + 40)),
+                         task_type="offline", max_new_tokens=3)
+          for i in range(4)]
+    n_deferred = sum(1 for h in hs if h._deferred)
+    assert n_deferred == 3
+    service.run()
+    assert all(h.status is HandleStatus.FINISHED for h in hs)
+    assert len(requeued) == n_deferred
+    assert service.live.requeued == n_deferred
+    assert service.admission.requeued_total == n_deferred
+
+
+def test_pump_preserves_deferred_fifo_order():
+    """A saturated cap must not rotate the overflow queue: deferred work
+    drains in submission order once capacity frees."""
+    service = EchoService(
+        _engine(), admission=AdmissionConfig(offline_pool_cap=1))
+    requeued = []
+    service.events.on_requeue(lambda hd: requeued.append(hd.rid))
+    hs = [service.submit(tuple(range(i * 37, i * 37 + 40)),
+                         task_type="offline", max_new_tokens=3)
+          for i in range(5)]
+    deferred_order = [h.rid for h in hs if h._deferred]
+    assert len(deferred_order) == 4
+    service.run()
+    assert requeued == deferred_order, \
+        "deferred work must be admitted FIFO, not rotated"
+
+
+def test_cancel_deferred_is_tombstoned_not_scanned():
+    service = EchoService(
+        _engine(), admission=AdmissionConfig(offline_pool_cap=1))
+    hs = [service.submit(tuple(range(i * 37, i * 37 + 40)),
+                         task_type="offline", max_new_tokens=3)
+          for i in range(5)]
+    deferred = [h for h in hs if h._deferred]
+    victim = deferred[2]
+    assert victim.abort()
+    # the deque entry survives as a tombstone until pump sweeps it
+    assert victim.rid in service.admission._tombstones
+    assert not service.admission.cancel(victim), "double-cancel must fail"
+    service.run()
+    assert victim.status is HandleStatus.ABORTED
+    assert not service.admission._tombstones, "tombstone must be swept"
+    others = [h for h in hs if h is not victim]
+    assert all(h.status is HandleStatus.FINISHED for h in others)
 
 
 def test_trace_replay_admission_judges_at_arrival_time():
