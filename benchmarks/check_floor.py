@@ -1,0 +1,88 @@
+"""Benchmark-floor gate for CI: compare a fresh ``kv_swap.py --json`` run
+against the committed baseline and fail on regression.
+
+The virtual-clock benchmark is deterministic, so in steady state current ==
+baseline exactly; the tolerance absorbs intentional-but-small drift from
+cost-model tuning without letting a real regression through. Floors only —
+improvements always pass (update the committed baseline when they land):
+
+  * offline throughput per mode: current >= baseline * (1 - tolerance)
+  * SLO attainment per mode:     current >= baseline - tolerance
+  * headline booleans (swap_wins, overlap_wins): must stay True if the
+    baseline has them True
+
+On failure the exit message names every violated floor. To accept an
+intentional change, regenerate the baseline in-repo:
+
+    PYTHONPATH=src:. python benchmarks/kv_swap.py \
+        --json benchmarks/baselines/kv_swap.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+TPUT_KEY = "offline_throughput"
+SLO_KEYS = ("slo_ttft", "slo_tpot")
+BOOL_GATES = ("swap_wins", "overlap_wins")
+
+
+def check(current: dict, baseline: dict, tolerance: float) -> list:
+    """Returns a list of human-readable violations (empty = pass)."""
+    violations = []
+    for mode, base in baseline.items():
+        if mode == "headline":
+            continue
+        cur = current.get(mode)
+        if cur is None:
+            violations.append(f"{mode}: missing from current results")
+            continue
+        floor = base[TPUT_KEY] * (1.0 - tolerance)
+        if cur[TPUT_KEY] < floor:
+            violations.append(
+                f"{mode}.{TPUT_KEY}: {cur[TPUT_KEY]:.1f} < floor "
+                f"{floor:.1f} (baseline {base[TPUT_KEY]:.1f} -{tolerance:.0%})")
+        for key in SLO_KEYS:
+            if cur[key] < base[key] - tolerance:
+                violations.append(
+                    f"{mode}.{key}: {cur[key]:.3f} < floor "
+                    f"{base[key] - tolerance:.3f} (baseline {base[key]:.3f})")
+    base_head = baseline.get("headline", {})
+    cur_head = current.get("headline", {})
+    for gate in BOOL_GATES:
+        if base_head.get(gate) and not cur_head.get(gate):
+            violations.append(f"headline.{gate}: regressed True -> False")
+    return violations
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True,
+                    help="JSON from a fresh benchmarks/kv_swap.py --json run")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/kv_swap.json",
+                    help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="relative throughput / absolute SLO slack (0.10)")
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    violations = check(current, baseline, args.tolerance)
+    if violations:
+        print("benchmark floor violated:", file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        print("if intentional, refresh the baseline:\n"
+              "  PYTHONPATH=src:. python benchmarks/kv_swap.py "
+              "--json benchmarks/baselines/kv_swap.json", file=sys.stderr)
+        raise SystemExit(1)
+    modes = [m for m in baseline if m != "headline"]
+    print(f"benchmark floor ok: {', '.join(modes)} within "
+          f"{args.tolerance:.0%} of baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ import time
 
 import numpy as np
 
-from benchmarks.scenario import build_engine, time_model
+from benchmarks.scenario import build_engine
 from repro.core import ALL_POLICIES, BS, ECHO
 from repro.core.estimator import RatePredictor
 from repro.data import BurstyTrace

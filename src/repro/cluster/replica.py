@@ -13,7 +13,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-from repro.core.block_manager import chain_hash
+from repro.core.block_manager import chain_hash, prefix_chain
 from repro.core.engine import EchoEngine
 from repro.core.estimator import TimeModel
 from repro.core.policies import ECHO, PolicyConfig
@@ -92,10 +92,36 @@ class Replica:
     def prefix_summary(self) -> Dict[int, int]:
         return self.engine.pool.prefix_summary()
 
-    def affinity(self, group_hash: Optional[int]) -> int:
+    def host_prefix_blocks(self, req: Request,
+                           chain: Optional[List[int]] = None) -> int:
+        """Blocks of ``req``'s leading prefix parked on this replica's HOST
+        tier beyond what is device-resident — prefix locality that survives
+        an online burst flushing the device cache, restorable over PCIe
+        instead of recomputed. A routing signal the device-only probe
+        misses entirely. The router precomputes the request's hash
+        ``chain`` once and shares it across replicas (the hashes are
+        replica-independent; only residency differs)."""
+        bm = self.engine.bm
+        if bm.host is None or not bm.host.blocks:
+            return 0
+        if chain is None:
+            chain = prefix_chain(req.full_tokens, bm.block_size)
+        return bm.host_chain_blocks(chain, bm.device_chain_blocks(chain))
+
+    def affinity(self, group_hash: Optional[int],
+                 req: Optional[Request] = None,
+                 chain: Optional[List[int]] = None) -> int:
         """How much of this document group the replica already holds:
-        pooled members + in-flight members + 1 if the first block is still
-        resident in the KV cache (prefix reusable without recompute)."""
+        pooled members + in-flight members + the request's prefix blocks
+        resident in the KV tiers. Given the candidate ``req`` itself, both
+        tiers are counted *symmetrically at 1 per block* — device-cached
+        blocks (reusable for free) and host-parked blocks (restorable over
+        PCIe), device first in the chain walk, so a replica holding the
+        document in device cache always scores at least as high as one
+        that would have to swap it back in. Work stealing and the router
+        thus steer work toward held KV wherever it lives. Without ``req``
+        (legacy single-signal probe) the first block contributes +1 per
+        tier it is resident in."""
         if group_hash is None:
             return 0
         eng = self.engine
@@ -107,8 +133,16 @@ class Replica:
         for r in eng.scheduler.running:
             if not r.is_online and first_block_hash(r, bs) == group_hash:
                 n += 1
-        if group_hash in eng.bm.hash_to_bid:
-            n += 1
+        if req is not None:
+            if chain is None:
+                chain = prefix_chain(req.full_tokens, bs)
+            dev = eng.bm.device_chain_blocks(chain)
+            n += dev + eng.bm.host_chain_blocks(chain, dev)
+        else:
+            if group_hash in eng.bm.hash_to_bid:
+                n += 1
+            if eng.bm.host is not None and group_hash in eng.bm.host:
+                n += 1                 # first block parked host-side
         return n
 
     def predicted_added_latency(self, req: Request) -> float:

@@ -24,6 +24,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.cluster.replica import Replica, first_block_hash
+from repro.core.block_manager import prefix_chain
 from repro.core.request import Request
 
 ROUTER_POLICIES = ("affinity", "round_robin", "random")
@@ -36,6 +37,7 @@ class RouterStats:
     affinity_hits: int = 0         # offline dispatches that found a home group
     steals: int = 0                # rebalance events
     stolen_requests: int = 0
+    steal_affinity_hits: int = 0   # stolen requests placed onto held KV
     per_replica_online: dict = field(default_factory=dict)
     per_replica_offline: dict = field(default_factory=dict)
 
@@ -83,7 +85,16 @@ class Router:
         if self.policy == "random":
             return self.replicas[int(self._rng.integers(len(self.replicas)))]
         group = first_block_hash(req, self._block_size)
-        scored = [(rep.affinity(group), rep) for rep in self.replicas]
+        # the affinity term sees pooled/in-flight peers, the device-cached
+        # prefix, AND the host swap tier: a replica whose device cache was
+        # flushed by a burst but whose host tier still parks the document
+        # keeps attracting its group (restore over PCIe beats recompute).
+        # The hash chain is replica-independent: compute it once per
+        # dispatch, probe residency per replica.
+        chain = (prefix_chain(req.full_tokens, self._block_size)
+                 if group is not None else None)
+        scored = [(rep.affinity(group, req, chain), rep)
+                  for rep in self.replicas]
         best_aff = max(aff for aff, _ in scored)
         if best_aff > 0:
             self.stats.affinity_hits += 1
@@ -96,7 +107,11 @@ class Router:
     # ------------------------------------------------------------- stealing
     def rebalance(self) -> int:
         """Shed pooled offline work from replicas whose online queue has
-        spiked to the calmest replica. Returns requests moved."""
+        spiked to calm replicas. Each stolen request is re-placed by host-
+        tier-aware affinity — stealing moves work *toward* parked KV (a calm
+        replica whose swap tier already holds the document's prefix wins
+        over the merely least-loaded one), falling back to the calmest
+        replica for groups nobody holds. Returns requests moved."""
         moved_total = 0
         for rep in self.replicas:
             if rep.online_queue_depth() < self.steal_queue_depth:
@@ -107,14 +122,27 @@ class Router:
                        and o.online_queue_depth() < self.steal_queue_depth]
             if not targets:
                 continue
-            target = min(targets, key=lambda o: (o.online_queue_depth(),
-                                                 o.offline_backlog(), o.id))
             moved = rep.steal_offline(self.steal_batch)
             if not moved:
                 continue
+            calmest = min(targets, key=lambda o: (o.online_queue_depth(),
+                                                  o.offline_backlog(), o.id))
             for req in moved:
+                group = first_block_hash(req, self._block_size)
+                chain = (prefix_chain(req.full_tokens, self._block_size)
+                         if group is not None else None)
+                scored = [(o.affinity(group, req, chain), o)
+                          for o in targets]
+                best_aff = max(aff for aff, _ in scored)
+                if best_aff > 0:
+                    target = min((o for aff, o in scored if aff == best_aff),
+                                 key=lambda o: (o.online_queue_depth(),
+                                                o.offline_backlog(), o.id))
+                    self.stats.steal_affinity_hits += 1
+                else:
+                    target = calmest
                 target.submit(req)
-            target.stolen_in += len(moved)
+                target.stolen_in += 1
             self.stats.steals += 1
             self.stats.stolen_requests += len(moved)
             moved_total += len(moved)

@@ -53,6 +53,11 @@ class ClusterStats:
     def slo_attainment(self, kind: str = "ttft") -> float:
         return self.merged().slo_attainment(kind)
 
+    def swap_hidden_frac(self) -> float:
+        """Fleet-wide fraction of PCIe swap traffic hidden under compute
+        (0.0 when serial or swap-free; see EngineStats.swap_hidden_frac)."""
+        return self.merged().swap_hidden_frac()
+
     def finished_counts(self) -> Tuple[int, int]:
         m = self.merged()
         on = sum(1 for r in m.finished if r.is_online)

@@ -7,7 +7,7 @@ ever lowered (ShapeDtypeStruct dry-run); reduced() variants run on CPU.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 

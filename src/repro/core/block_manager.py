@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.request import Request, TaskType
@@ -40,6 +40,20 @@ SWAP_MIN_PRIORITY = 1.0       # swap out only blocks with forward reuse
 
 def chain_hash(prev: int, tokens: Tuple[int, ...]) -> int:
     return hash((prev, tokens))
+
+
+def prefix_chain(tokens: Sequence[int], block_size: int) -> List[int]:
+    """Cumulative chain hashes of every full block of ``tokens``. Computed
+    once per request and shared across residency probes — the cluster
+    router scores one request against every replica, and rehashing the
+    same prefix per replica made affinity O(replicas x prompt-blocks)."""
+    prev = 0
+    out: List[int] = []
+    for bi in range(len(tokens) // block_size):
+        prev = chain_hash(prev,
+                          tuple(tokens[bi * block_size:(bi + 1) * block_size]))
+        out.append(prev)
+    return out
 
 
 @dataclass
@@ -255,6 +269,30 @@ class BlockManager:
             n += bs
             cached += bs
         return cached
+
+    def device_chain_blocks(self, chain: Sequence[int]) -> int:
+        """Leading blocks of a precomputed hash chain resident on device
+        (``probe_prefix`` in block units, minus the rehash). Read-only."""
+        n = 0
+        for h in chain:
+            if h not in self.hash_to_bid:
+                break
+            n += 1
+        return n
+
+    def host_chain_blocks(self, chain: Sequence[int],
+                          start_block: int) -> int:
+        """Blocks of a precomputed chain restorable by swap-in from
+        ``start_block``: resident in the host tier but NOT on device
+        (``probe_host_prefix`` in block units, minus the rehash)."""
+        if self.host is None or not self.host.blocks:
+            return 0
+        n = 0
+        for h in chain[start_block:]:
+            if h in self.hash_to_bid or h not in self.host:
+                break
+            n += 1
+        return n
 
     def probe_host_prefix(self, tokens: Sequence[int], start_tokens: int) -> int:
         """Tokens restorable by swap-in: the longest run of consecutive full

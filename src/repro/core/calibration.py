@@ -14,7 +14,7 @@ is scored with the corrected model.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Deque, List, Optional, Sequence, Tuple
 
 from repro.core.estimator import TimeModel
@@ -62,11 +62,19 @@ class OnlineCalibrator:
         self._decode: Deque[Tuple[int, float, float]] = deque(maxlen=window)
         self._mixed: Deque[Tuple[List[Span], List[int], float]] = \
             deque(maxlen=window)
+        # swap staging observations: (tokens, seconds) for the PCIe terms,
+        # (compute, tokens, total) for the overlap launch overhead
+        self._swap: Deque[Tuple[int, float]] = deque(maxlen=window)
+        self._overlap: Deque[Tuple[float, int, float]] = deque(maxlen=window)
 
         self.ewma_err: Optional[float] = None
+        self.ewma_swap_err: Optional[float] = None
         self.n_observed = 0
+        self.n_swap_observed = 0
         self.refits = 0
+        self.swap_refits = 0
         self._since_refit = 0
+        self._since_swap_refit = 0
         # bounded so a long-running server cannot grow without limit; the
         # default keeps every benchmark-length run intact
         self.history: Deque[CalibrationSample] = deque(maxlen=history_limit)
@@ -109,6 +117,36 @@ class OnlineCalibrator:
             self.refit()
         return rel
 
+    def observe_swap(self, n_tokens: int, observed: float) -> float:
+        """Record one staging transfer (ROADMAP open item: the swap terms
+        were static after ``fit_swap`` while the compute terms refit). On
+        the wall path ``observed`` is the copy worker's measured staging
+        seconds; on the virtual path the ground-truth clock's transfer leg.
+        Refits the PCIe terms in place on sustained drift. Returns the
+        transfer's relative error under the (pre-refit) estimate."""
+        if n_tokens <= 0:
+            return 0.0
+        predicted = self.tm.swap_time(n_tokens)
+        rel = abs(predicted - observed) / max(observed, 1e-12)
+        if self.ewma_swap_err is None:
+            self.ewma_swap_err = rel
+        else:
+            self.ewma_swap_err += self.ewma_alpha * (rel - self.ewma_swap_err)
+        self._swap.append((n_tokens, observed))
+        self.n_swap_observed += 1
+        self._since_swap_refit += 1
+        if self.swap_drifting():
+            self.refit_swap()
+        return rel
+
+    def observe_overlap(self, compute: float, n_tokens: int,
+                        total: float) -> None:
+        """Record one overlapped iteration (compute, transfer tokens, total
+        observed time) — the sample family that refits the async launch
+        overhead (``fit_swap_overlap``) alongside the PCIe terms."""
+        if n_tokens > 0:
+            self._overlap.append((compute, n_tokens, total))
+
     def drifting(self) -> bool:
         return (self.ewma_err is not None
                 and self.ewma_err > self.drift_threshold
@@ -116,6 +154,12 @@ class OnlineCalibrator:
                 and self.n_observed >= self.min_samples
                 and (len(self._prefill) >= 3 or len(self._decode) >= 3
                      or len(self._mixed) >= 3))
+
+    def swap_drifting(self) -> bool:
+        return (self.ewma_swap_err is not None
+                and self.ewma_swap_err > self.drift_threshold
+                and self._since_swap_refit >= self.cooldown
+                and len(self._swap) >= max(self.min_samples // 3, 2))
 
     # ------------------------------------------------------------- refit
     def _pseudo_prefill(self) -> List[Tuple[Span, float]]:
@@ -190,6 +234,21 @@ class OnlineCalibrator:
         # bucket describe the new hardware; older ones would bias the next
         # fit toward hardware that no longer exists
         for bucket in (self._prefill, self._decode, self._mixed):
+            while len(bucket) > self.cooldown:
+                bucket.popleft()
+
+    def refit_swap(self) -> None:
+        """Refit the PCIe transfer terms (and, given overlap samples, the
+        launch overhead) from the observed staging times, through the
+        estimator's own fitting routines — the swap analogue of ``refit``."""
+        if len(self._swap) >= 2:
+            self.tm.fit_swap(list(self._swap))
+        if len(self._overlap) >= 2 and self.tm.swap_overlap:
+            self.tm.fit_swap_overlap(list(self._overlap))
+        self.swap_refits += 1
+        self._since_swap_refit = 0
+        self.ewma_swap_err = None        # measure the refit terms afresh
+        for bucket in (self._swap, self._overlap):
             while len(bucket) > self.cooldown:
                 bucket.popleft()
 

@@ -9,13 +9,21 @@ methodology) or wall time ("wall"). The scheduler's ``time_model`` is only
 an *estimate* of that clock: pass a different (or perturbed) ``clock_model``
 to study miscalibration, and an ``OnlineCalibrator`` (``policy.calibrate``)
 to refit the estimate from the observed iteration times (§5).
+
+Host-tier KV staging overlaps with compute (``TimeModel.swap_overlap``):
+the virtual clock charges ``max(compute, transfer) + launch`` and on the
+wall path a single-worker copy stream (``_SwapStager``) double-buffers
+payload staging against the runner, with per-block completion fences
+before any page a plan reads or writes.
 """
 from __future__ import annotations
 
 import bisect
+import threading
 import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -24,8 +32,8 @@ from repro.core.calibration import OnlineCalibrator
 from repro.core.estimator import MemoryPredictor, TimeModel
 from repro.core.policies import PolicyConfig
 from repro.core.radix_pool import OfflinePool
-from repro.core.request import Request, RequestState, TaskType
-from repro.core.scheduler import Plan, Scheduler
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import Scheduler
 from repro.models.model import Model
 from repro.models.paged import PagedRunner
 
@@ -48,6 +56,8 @@ class IterationRecord:
     swap_in_tokens: int = 0        # KV restored from the host tier (PCIe)
     swap_out_tokens: int = 0       # KV parked on the host tier (PCIe)
     host_blocks: int = 0           # host-tier occupancy at iteration end
+    swap_transfer_time: float = 0.0  # PCIe seconds put on the copy stream
+    swap_exposed_time: float = 0.0   # the tail NOT hidden under compute
 
 
 class EngineListener:
@@ -69,6 +79,100 @@ class EngineListener:
     def on_swap_in(self, req: Request, n_tokens: int, t: float) -> None: ...
 
     def on_swap_out(self, n_tokens: int, t: float) -> None: ...
+
+    def on_swap_overlap(self, transfer_s: float, exposed_s: float,
+                        t: float) -> None: ...
+
+
+class _SwapStager:
+    """One async copy "stream" for host<->device KV staging (wall path).
+
+    Split-phase contract with the runner:
+      * swap-out — the device-side page slice is dispatched on the engine
+        thread at launch (dispatch order sequences it before any later
+        compute overwrites the page); the blocking D2H materialization runs
+        on the worker.
+      * swap-in — the worker uploads the payload H2D off-thread; the cheap
+        donated scatter into the page pool stays with the engine thread and
+        applies at fence time (the pool is single-owner state).
+
+    ``fence(bids)`` MUST run before the runner reads or writes any of
+    ``bids``. Entries stay tracked until fenced — a swapped-in block whose
+    owner was preempted and whose page is only touched many iterations
+    later still gets its payload applied before first use. ``launch``
+    fences a bid that is being re-purposed while a previous transfer is
+    still in flight, preserving journal order per page."""
+
+    def __init__(self, runner):
+        self.runner = runner
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="kv-stage")
+        self._inflight: Dict[int, Tuple[str, Future]] = {}
+        self.staged_wall = 0.0      # seconds of staging done on the worker
+        self.exposed_wall = 0.0     # seconds the engine blocked in fences
+        # (tokens, worker seconds) per transfer, for swap-term calibration;
+        # bounded so a virtual-clock run that never drains cannot grow it.
+        # The lock serializes worker appends against the engine's drain.
+        self._samples: List[Tuple[int, float]] = []
+        self._samples_lock = threading.Lock()
+
+    def launch(self, events) -> None:
+        for kind, bid, hb in events:
+            if bid in self._inflight:
+                self.fence([bid])
+            if kind == "out":
+                snap = self.runner.snapshot_block(bid)
+                fut = self._pool.submit(self._stage_out, hb, snap)
+            else:
+                fut = self._pool.submit(self._stage_in, hb)
+            self._inflight[bid] = (kind, fut)
+
+    def _stage_out(self, hb, snap):
+        t0 = time.perf_counter()
+        hb.payload = self.runner.materialize(snap)
+        self._account(hb.n_tokens, time.perf_counter() - t0)
+        return None
+
+    def _stage_in(self, hb):
+        # single-worker FIFO: the "out" that produced this payload (possibly
+        # this very iteration) has already run by the time we get here
+        assert hb.payload is not None, \
+            f"swap-in of block hash {hb.hash} with no staged payload"
+        t0 = time.perf_counter()
+        staged = self.runner.stage_payload(hb.payload)
+        self._account(hb.n_tokens, time.perf_counter() - t0)
+        return staged
+
+    def _account(self, n_tokens: int, dt: float) -> None:
+        with self._samples_lock:
+            self.staged_wall += dt
+            if len(self._samples) < 2048:
+                self._samples.append((n_tokens, dt))
+
+    def fence(self, bids: Iterable[int]) -> None:
+        """Complete every in-flight transfer touching ``bids``: block on
+        the worker and, for swap-ins, apply the pool scatter."""
+        for bid in list(bids):
+            entry = self._inflight.pop(bid, None)
+            if entry is None:
+                continue
+            kind, fut = entry
+            t0 = time.perf_counter()
+            staged = fut.result()
+            if kind == "in":
+                self.runner.write_block(bid, staged)
+            self.exposed_wall += time.perf_counter() - t0
+
+    def flush(self) -> None:
+        self.fence(list(self._inflight))
+
+    def inflight_blocks(self) -> int:
+        return len(self._inflight)
+
+    def drain_samples(self) -> List[Tuple[int, float]]:
+        with self._samples_lock:
+            out, self._samples = self._samples, []
+        return out
 
 
 @dataclass
@@ -106,6 +210,25 @@ class EngineStats:
     def swapped_out_tokens(self) -> int:
         """Total KV parked device->host instead of dropped."""
         return sum(r.swap_out_tokens for r in self.iterations)
+
+    @property
+    def swap_transfer_time(self) -> float:
+        """Total PCIe seconds put on the copy stream."""
+        return sum(r.swap_transfer_time for r in self.iterations)
+
+    @property
+    def swap_exposed_time(self) -> float:
+        """Transfer seconds NOT hidden under compute (what the clock and
+        the SLO budget actually paid)."""
+        return sum(r.swap_exposed_time for r in self.iterations)
+
+    def swap_hidden_frac(self) -> float:
+        """Fraction of swap traffic the overlap hid: 0.0 on the serial
+        path, approaching 1.0 when compute fully covers the transfers."""
+        transfer = self.swap_transfer_time
+        if transfer <= 0.0:
+            return 0.0
+        return max(1.0 - self.swap_exposed_time / transfer, 0.0)
 
     def slo_attainment(self, kind: str = "ttft") -> float:
         """Fraction of decidable online requests meeting the SLO. Requests
@@ -172,6 +295,20 @@ class EchoEngine:
                                           chunk_size)
                 # state-snapshot families have no paged KV to stage host-side
                 self.bm.host = None
+        # async swap/compute overlap (wall path): a single-worker copy
+        # stream double-buffers payload staging against runner compute, with
+        # per-block fences before first touch. Gated on the same switch the
+        # virtual clock and the scheduler's estimate use (tm.swap_overlap).
+        self._stager: Optional[_SwapStager] = None
+        if (self.runner is not None and self.bm.host is not None
+                and hasattr(self.runner, "snapshot_block")
+                and getattr(self.tm, "swap_overlap", False)):
+            self._stager = _SwapStager(self.runner)
+        # cumulative stager seconds already attributed to an iteration
+        # record — worker staging that lands between steps (or during idle
+        # launches) is picked up by the NEXT record instead of dropped
+        self._staged_seen = 0.0
+        self._exposed_seen = 0.0
         self.mem_pred = MemoryPredictor(window=120.0)
         self.now = 0.0
         self.stats = EngineStats()
@@ -311,17 +448,26 @@ class EchoEngine:
         return n
 
     def _execute_swaps(self) -> int:
-        """Stage the KV payloads of this iteration's swap decisions. Must
-        run before any runner write: an "out" block's device pages are only
-        intact until the new owner's prefill lands. On the virtual path the
-        journal is drained for accounting alone. Returns swapped-OUT tokens
-        (swap-in tokens are known from the plan)."""
+        """Dispatch the KV staging of this iteration's swap decisions.
+
+        With the async stager (wall path, overlap on) this only *launches*
+        the transfers: device-side snapshots are dispatched here — before
+        any runner write, while an "out" block's pages are still intact —
+        and the blocking copies run on the copy worker; the per-request
+        fences in ``step`` complete whatever the plan actually touches.
+        Without it (overlap off, or no paged runner) payloads are staged
+        inline exactly as before. On the virtual path the journal is
+        drained for accounting alone. Returns swapped-OUT tokens (swap-in
+        tokens are known from the plan)."""
         events = self.bm.drain_swap_events()
-        out_tokens = 0
+        out_tokens = sum(hb.n_tokens for kind, _, hb in events
+                         if kind == "out")
+        if self._stager is not None:
+            self._stager.launch(events)
+            return out_tokens
         stage = self.runner is not None and hasattr(self.runner, "read_block")
         for kind, bid, hb in events:
             if kind == "out":
-                out_tokens += hb.n_tokens
                 if stage:
                     hb.payload = self.runner.read_block(bid)
             elif stage:
@@ -329,6 +475,39 @@ class EchoEngine:
                     f"swap-in of block hash {hb.hash} with no staged payload"
                 self.runner.write_block(bid, hb.payload)
         return out_tokens
+
+    def _fence(self, bids: Iterable[int]) -> None:
+        """Complete in-flight staging on the blocks a runner call is about
+        to touch (no-op without the async stager)."""
+        if self._stager is not None:
+            self._stager.fence(bids)
+
+    def _observe_swap_clock(self, swap_in_tokens: int, swap_out_tokens: int,
+                            compute_time: float, iter_time: float,
+                            swap_transfer: float) -> None:
+        """Feed the calibrator's swap-term windows (ROADMAP: swap terms were
+        static after ``fit_swap``): per-event copy-worker timings on the
+        wall path, the ground-truth clock's transfer legs on the virtual
+        path, and — when overlap is active — the (compute, tokens, total)
+        triple that refits the launch overhead."""
+        cal = self.calibrator
+        total_tokens = swap_in_tokens + swap_out_tokens
+        if self._stager is not None and self.clock != "virtual":
+            for n, dt in self._stager.drain_samples():
+                cal.observe_swap(n, dt)
+        elif self.clock == "virtual":
+            if not hasattr(self.clock_model, "swap_time"):
+                return
+            if swap_in_tokens:
+                cal.observe_swap(swap_in_tokens,
+                                 self.clock_model.swap_time(swap_in_tokens))
+            if swap_out_tokens:
+                cal.observe_swap(swap_out_tokens,
+                                 self.clock_model.swap_time(swap_out_tokens))
+        elif total_tokens and swap_transfer > 0.0:
+            cal.observe_swap(total_tokens, swap_transfer)
+        if total_tokens and getattr(self.tm, "swap_overlap", False):
+            cal.observe_overlap(compute_time, total_tokens, iter_time)
 
     # ------------------------------------------------------------- step
     def step(self) -> Optional[IterationRecord]:
@@ -359,6 +538,8 @@ class EchoEngine:
                 return None
             return None
 
+        st = self._stager
+        exposed_pre = st.exposed_wall if st is not None else 0.0
         t0 = time.perf_counter()
         offline_tokens = 0
         online_tokens = 0
@@ -372,6 +553,9 @@ class EchoEngine:
             start = req.computed_tokens
             toks = req.full_tokens[start: start + chunk]
             if self.runner is not None:
+                # complete in-flight staging on this request's blocks only —
+                # other requests' transfers keep overlapping with this chunk
+                self._fence(req.block_ids)
                 logits = self.runner.prefill_chunk(list(toks), start,
                                                    req.block_ids, rid=req.rid)
             else:
@@ -391,6 +575,7 @@ class EchoEngine:
         decodes = [r for r in plan.decodes if not r.done]
         if decodes:
             if self.runner is not None:
+                self._fence({b for r in decodes for b in r.block_ids})
                 tokens = [r.full_tokens[r.computed_tokens] for r in decodes]
                 bts = [r.block_ids for r in decodes]
                 pos = [r.computed_tokens for r in decodes]
@@ -414,19 +599,47 @@ class EchoEngine:
         # PCIe swap traffic — BOTH directions — is clocked separately from
         # compute: the calibrator must see pure compute time or the Eq.6-8
         # refit would absorb transfer cost into the prefill coefficients.
-        # On the wall path the staging really happened in _execute_swaps,
-        # outside the runner window, so its measured time is added back.
-        swap_time = ((self.clock_model.swap_time(swap_in_tokens)
-                      + self.clock_model.swap_time(swap_out_tokens))
-                     if hasattr(self.clock_model, "swap_time") else 0.0)
-        compute_time = (self.clock_model.batch_time(spans, dlens)
-                        if self.clock == "virtual" else wall)
-        iter_time = compute_time + (swap_time if self.clock == "virtual"
-                                    else swap_wall)
+        # Under overlap only the *exposed* tail reaches the iteration time:
+        # the virtual clock charges max(compute, transfer) + launch, and on
+        # the wall path the copy worker really did stage concurrently — the
+        # fence stalls inside the runner window are the exposed tail.
+        clock = self.clock_model
+        transfer = ((clock.swap_time(swap_in_tokens)
+                     + clock.swap_time(swap_out_tokens))
+                    if hasattr(clock, "swap_time") else 0.0)
+        if self.clock == "virtual":
+            compute_time = clock.batch_time(spans, dlens)
+            if transfer > 0.0 and hasattr(clock, "overlapped_iteration_time"):
+                iter_time = clock.overlapped_iteration_time(compute_time,
+                                                            transfer)
+            else:
+                iter_time = compute_time + transfer
+            swap_transfer = transfer
+            swap_exposed = iter_time - compute_time
+        elif st is not None:
+            # attribute everything accrued since the last record (staging
+            # from the scheduling gap / idle launches included), but only
+            # subtract the fences that stalled THIS runner window from the
+            # calibrator's compute sample
+            swap_transfer = st.staged_wall - self._staged_seen
+            swap_exposed = st.exposed_wall - self._exposed_seen
+            self._staged_seen = st.staged_wall
+            self._exposed_seen = st.exposed_wall
+            compute_time = max(wall - (st.exposed_wall - exposed_pre), 0.0)
+            iter_time = wall + swap_wall      # swap_wall: launch overhead
+        else:
+            # synchronous staging happened in _execute_swaps, outside the
+            # runner window, so its measured time is added back — fully
+            # exposed, exactly the pre-overlap wall clock
+            swap_transfer = swap_exposed = swap_wall
+            compute_time = wall
+            iter_time = wall + swap_wall
         self.now += iter_time
         if self.calibrator is not None:
             # feed the observed clock back into the scheduler's estimate
             self.calibrator.observe(self.now, spans, dlens, compute_time)
+            self._observe_swap_clock(swap_in_tokens, swap_out_tokens,
+                                     compute_time, iter_time, swap_transfer)
         for req, lg in emissions:               # tokens arrive at iteration end
             self._emit(req, lg)
         for req in plan.preempted:
@@ -438,6 +651,9 @@ class EchoEngine:
         for req, n in plan.swap_ins:
             for l in self.listeners:
                 l.on_swap_in(req, n, self.now)
+        if swap_transfer > 0.0:
+            for l in self.listeners:
+                l.on_swap_overlap(swap_transfer, swap_exposed, self.now)
 
         # ---- estimator feedback + threshold update (§5.3)
         online_kv = self._online_kv_tokens()
@@ -447,10 +663,13 @@ class EchoEngine:
                 self.bm.num_blocks, self.bm.block_size, online_kv,
                 self.bm.clean_evictable_count())
             if self.bm.host is not None:
-                # host-tier headroom for the predicted burst's swap-outs
+                # host-tier headroom for the predicted burst's swap-outs,
+                # plus the slots whose payloads are still staging in flight
                 self.bm.host.reserve = self.mem_pred.host_reserve_blocks(
                     self.bm.block_size, online_kv,
-                    cap_blocks=self.bm.host.capacity)
+                    cap_blocks=self.bm.host.capacity,
+                    inflight_blocks=(st.inflight_blocks()
+                                     if st is not None else 0))
         rec = IterationRecord(
             t=self.now,
             n_prefill=len(plan.prefills),
@@ -466,6 +685,8 @@ class EchoEngine:
             swap_in_tokens=swap_in_tokens,
             swap_out_tokens=swap_out_tokens,
             host_blocks=len(self.bm.host) if self.bm.host is not None else 0,
+            swap_transfer_time=swap_transfer,
+            swap_exposed_time=swap_exposed,
         )
         self.stats.iterations.append(rec)
         return rec
@@ -486,4 +707,6 @@ class EchoEngine:
                     break
             else:
                 stalls = 0
+        if self._stager is not None:
+            self._stager.flush()       # land in-flight payloads before idle
         return self.stats

@@ -15,7 +15,7 @@ from __future__ import annotations
 import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -34,6 +34,8 @@ class TimeModel:
     lam: float = 0.8         # prefill/decode overlap coefficient
     swap_tok: float = 0.0    # s / token    (host<->device KV over PCIe)
     swap_floor: float = 0.0  # s            (per-transfer dispatch floor)
+    swap_launch: float = 0.0  # s           (async copy launch/fence overhead)
+    swap_overlap: bool = True  # overlap PCIe transfers with compute (Eq.9)
     quadratic_prefill: bool = True
 
     @classmethod
@@ -44,7 +46,8 @@ class TimeModel:
         8B KV footprint over PCIe 4.0 x16 (~25 GB/s effective)."""
         kw = dict(alpha=2e-7, beta=1e-4, c=2e-3, gamma=3e-5, delta=3e-5,
                   d0=2e-3, lam=0.9,
-                  swap_tok=cls.pcie_swap_tok(25.0), swap_floor=1e-4)
+                  swap_tok=cls.pcie_swap_tok(25.0), swap_floor=1e-4,
+                  swap_launch=5e-5)
         kw.update(overrides)
         return cls(**kw)
 
@@ -56,7 +59,8 @@ class TimeModel:
         PCIe 5.0 x16 doubles the swap bandwidth (~50 GB/s effective)."""
         kw = dict(alpha=8e-8, beta=4e-5, c=1e-3, gamma=1.8e-5, delta=1.8e-5,
                   d0=1.2e-3, lam=0.92,
-                  swap_tok=cls.pcie_swap_tok(50.0), swap_floor=5e-5)
+                  swap_tok=cls.pcie_swap_tok(50.0), swap_floor=5e-5,
+                  swap_launch=2e-5)
         kw.update(overrides)
         return cls(**kw)
 
@@ -127,6 +131,24 @@ class TimeModel:
         block to the host tier costs instead of its recompute."""
         return trips * self.swap_time(n_tokens) / max(self.beta, 1e-12)
 
+    def overlapped_iteration_time(self, compute: float,
+                                  transfer: float) -> float:
+        """Iteration time when PCIe transfers run on an async copy stream:
+        ``max(compute, transfer)`` plus the launch/fence overhead of kicking
+        the stream, instead of the serial ``compute + transfer``. With
+        ``swap_overlap=False`` this degrades to the serial charge exactly
+        (the pre-overlap clock)."""
+        if transfer <= 0.0:
+            return compute
+        if not self.swap_overlap:
+            return compute + transfer
+        return max(compute, transfer) + self.swap_launch
+
+    def exposed_swap_time(self, compute: float, transfer: float) -> float:
+        """The transfer tail NOT hidden under compute — the only part of the
+        PCIe traffic that counts against the SLO budget under overlap."""
+        return self.overlapped_iteration_time(compute, transfer) - compute
+
     # ------------------------------------------------------------ fitting
     def fit_prefill(self, samples: Sequence[Tuple]) -> None:
         """samples: (prompt_len, seconds) for single-prefill iterations, or
@@ -187,6 +209,18 @@ class TimeModel:
         self.swap_floor = float(max(min(np.min(ts), max(float(coef[1]), 0.0)),
                                     0.0))
 
+    def fit_swap_overlap(self, samples: Sequence[Tuple[float, int, float]]) -> None:
+        """samples: (compute_seconds, transfer_tokens, total_seconds) for
+        iterations that carried overlapped swap traffic. Fits the launch
+        overhead as the median residual of the max-model — robust to the odd
+        iteration where a fence exposed a partial tail."""
+        resid = [t - max(c, self.swap_time(n))
+                 for c, n, t in samples if n > 0]
+        if len(resid) < 2:
+            return
+        resid.sort()
+        self.swap_launch = float(max(resid[len(resid) // 2], 0.0))
+
     def fit_lambda(self, samples: Sequence[Tuple[float, float, float]]) -> None:
         """samples: (t_prefill_est, t_decode_est, seconds) for mixed batches."""
         if not samples:
@@ -241,6 +275,28 @@ class PerturbedTimeModel:
         jitter (the link is not the contended resource)."""
         return self.base.swap_time(n_tokens) * self.scale
 
+    @property
+    def swap_overlap(self) -> bool:
+        return self.base.swap_overlap
+
+    @property
+    def swap_launch(self) -> float:
+        return self.base.swap_launch * self.scale
+
+    def overlapped_iteration_time(self, compute: float,
+                                  transfer: float) -> float:
+        """Same max-plus-launch structure as the base model; ``compute`` and
+        ``transfer`` arrive already drifted/jittered by this wrapper, so only
+        the launch overhead picks up the systematic scale here."""
+        if transfer <= 0.0:
+            return compute
+        if not self.base.swap_overlap:
+            return compute + transfer
+        return max(compute, transfer) + self.swap_launch
+
+    def exposed_swap_time(self, compute: float, transfer: float) -> float:
+        return self.overlapped_iteration_time(compute, transfer) - compute
+
 
 @dataclass
 class MemoryPredictor:
@@ -275,12 +331,16 @@ class MemoryPredictor:
 
     def host_reserve_blocks(self, block_size: int,
                             current_online_tokens: float = 0.0,
-                            cap_blocks: Optional[int] = None) -> int:
+                            cap_blocks: Optional[int] = None,
+                            inflight_blocks: int = 0) -> int:
         """Host-tier headroom (§5.3 applied to the swap layer): slots to
         keep clear of low-priority swaps so a predicted online burst can
-        always park the KV it preempts instead of losing it to recompute."""
+        always park the KV it preempts instead of losing it to recompute.
+        ``inflight_blocks`` — swap payloads still staging on the async copy
+        stream — extend the reserve: a slot whose transfer has not landed
+        cannot be re-purposed without losing the work in flight."""
         inc = max(self.predict() - current_online_tokens, 0.0)
-        reserve = int(math.ceil(inc / block_size))
+        reserve = int(math.ceil(inc / block_size)) + max(inflight_blocks, 0)
         if cap_blocks is not None:
             reserve = min(reserve, cap_blocks // 2)
         return reserve

@@ -11,7 +11,6 @@ methodology.
 """
 from __future__ import annotations
 
-import copy
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 

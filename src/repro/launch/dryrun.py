@@ -20,11 +20,10 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, get_shape
 from repro.launch.mesh import make_production_mesh
-from repro.launch.sharding import (batch_spec, input_specs, install_hook,
+from repro.launch.sharding import (input_specs, install_hook,
                                    param_shardings)
 from repro.models import hooks
 from repro.models.model import Model

@@ -29,7 +29,9 @@ Both paths drive the workload through the one ``EchoService`` facade
 
 KV tiering: ``--host-kv-gb`` attaches a host-memory swap tier (per replica
 on the cluster path) sized in GB, ``--pcie-gbps`` sets the transfer-term
-bandwidth, ``--no-swap`` forces the recompute-only baseline:
+bandwidth, ``--no-swap`` forces the recompute-only baseline, and
+``--no-swap-overlap`` charges transfers serially instead of overlapping
+them with compute on the async copy stream:
 
   PYTHONPATH=src python -m repro.launch.serve --host-kv-gb 4 --pcie-gbps 25
 """
@@ -41,7 +43,7 @@ import dataclasses
 import jax
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core import (ALL_POLICIES, ECHO, SLO, EchoEngine, TimeModel)
+from repro.core import ALL_POLICIES, SLO, EchoEngine, TimeModel
 from repro.core.estimator import KV_BYTES_PER_TOKEN_8B
 from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
 from repro.models import Model
@@ -102,6 +104,10 @@ def print_report(service: EchoService, stats, online, offline) -> None:
               f"({service.live.swap_ins} events)  "
               f"out {service.live.swapped_out_tokens} tok "
               f"({service.live.swap_outs} events)")
+    if service.live.swap_transfer_time > 0:
+        print(f"swap overlap: transfer {service.live.swap_transfer_time:.3f}s"
+              f"  exposed {service.live.swap_exposed_time:.3f}s"
+              f"  hidden {service.live.swap_hidden_frac():.0%}")
     engines = service.backend.engines()
     for i, eng in enumerate(engines):
         tag = f"  replica {i}:" if len(engines) > 1 else "engine:"
@@ -140,7 +146,8 @@ def clock_models(args, *, quadratic_prefill: bool = True,
         return None
     out = []
     for i, name in enumerate(names):
-        kw = dict(quadratic_prefill=quadratic_prefill)
+        kw = dict(quadratic_prefill=quadratic_prefill,
+                  swap_overlap=not args.no_swap_overlap)
         if swap_tok is not None:
             kw["swap_tok"] = swap_tok
         base = TimeModel.preset(name, **kw)
@@ -157,8 +164,6 @@ def calibrate(model: Model, params, *, chunk_size=64, num_blocks=192,
               block_size=16) -> TimeModel:
     """Fit the Eq.6-8 coefficients by micro-benchmarking the runner (§6)."""
     import time as _t
-
-    import numpy as np
 
     from repro.models.paged import PagedRunner
     runner = PagedRunner(model, params, num_blocks, block_size,
@@ -201,7 +206,8 @@ def serve_cluster(args) -> None:
 
     policy = resolve_policy(args)
     swap_tok = TimeModel.pcie_swap_tok(args.pcie_gbps)
-    tm = TimeModel.a100(swap_tok=swap_tok)
+    tm = TimeModel.a100(swap_tok=swap_tok,
+                        swap_overlap=not args.no_swap_overlap)
     base = default_tenants(args.tenants)
     scale = args.online_rate / sum(t.online_rate for t in base)
     tenants = tuple(dataclasses.replace(t, online_rate=t.online_rate * scale,
@@ -276,6 +282,11 @@ def main() -> None:
     ap.add_argument("--no-swap", action="store_true",
                     help="disable the host swap tier even with "
                          "--host-kv-gb set (recompute-only baseline)")
+    ap.add_argument("--no-swap-overlap", action="store_true",
+                    help="charge PCIe swap traffic serially against every "
+                         "iteration instead of overlapping it with compute "
+                         "on an async copy stream (the pre-overlap cost "
+                         "model; also disables the wall-path double buffer)")
     args = ap.parse_args()
 
     if args.replicas > 1:
@@ -293,7 +304,8 @@ def main() -> None:
 
     quad = cfg.family not in ("ssm", "hybrid")
     swap_tok = TimeModel.pcie_swap_tok(args.pcie_gbps, kv_bytes_per_token(cfg))
-    tm = TimeModel.a100(quadratic_prefill=quad, swap_tok=swap_tok)
+    tm = TimeModel.a100(quadratic_prefill=quad, swap_tok=swap_tok,
+                        swap_overlap=not args.no_swap_overlap)
     clocks = clock_models(args, quadratic_prefill=quad, swap_tok=swap_tok)
     if clocks and len(clocks) > 1:
         print(f"warning: --replicas 1 uses only the first --hw-profile "

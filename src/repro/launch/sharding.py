@@ -15,7 +15,6 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
-from repro.launch.mesh import data_axes
 from repro.models import hooks
 from repro.models.model import Model
 

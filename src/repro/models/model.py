@@ -6,7 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import InputShape, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
 from repro.models.common import (default_positions, dtype_of, embed_init,
                                  rms_norm, rope_angles)
@@ -134,10 +134,7 @@ class Model:
 
     def make_cache(self, batch, total_len, as_specs=False):
         """Cache pytree matching the segment structure (zeros or specs)."""
-        if as_specs:
-            make = lambda shp, dt: jax.ShapeDtypeStruct(shp, dt)
-        else:
-            make = lambda shp, dt: jnp.zeros(shp, dt)
+        make = jax.ShapeDtypeStruct if as_specs else jnp.zeros
         caches = []
         for stype, unit, n in tfm.segments(self.cfg):
             entries = tuple(self._cache_entry(k, batch, total_len, make)

@@ -8,7 +8,6 @@ decode is batched — the two batch shapes Echo's scheduler composes.
 """
 from __future__ import annotations
 
-import functools
 from typing import List, Optional, Sequence
 
 import jax
@@ -190,17 +189,44 @@ class PagedRunner:
         BlockManager); nothing to drop."""
 
     # ------------------------------------------------------- host KV swap
-    def read_block(self, bid: int):
-        """Device->host staging of one KV page across every layer: the
-        swap-out half of the tiered cache. Returns a nested
-        [segment][unit]{"k","v"} structure of host numpy arrays, shape
-        (n_layers, page_size, H, hd) each."""
+    def snapshot_block(self, bid: int):
+        """Phase 1 of a device->host block read: dispatch the per-layer page
+        slices and return the (possibly still in-flight) device arrays. Must
+        run on the thread that owns the pool — dispatch order sequences the
+        slice before any later compute or donated scatter overwrites the
+        page, so the snapshot always sees the pre-overwrite content."""
         out = []
         for seg in self.pages:
-            out.append(tuple(
-                {name: np.asarray(jax.device_get(pg[name][:, bid]))
-                 for name in ("k", "v")} for pg in seg))
+            out.append(tuple({name: pg[name][:, bid] for name in ("k", "v")}
+                             for pg in seg))
         return out
+
+    @staticmethod
+    def materialize(snapshot):
+        """Phase 2: block until the snapshot's slices land and copy them to
+        host numpy. Only *reads* self-contained device buffers, so it is
+        safe on the async copy worker while the owner thread keeps
+        dispatching compute."""
+        return [tuple(
+            {name: np.asarray(jax.device_get(blk[name]))
+             for name in ("k", "v")} for blk in seg)
+            for seg in snapshot]
+
+    def read_block(self, bid: int):
+        """Device->host staging of one KV page across every layer: the
+        swap-out half of the tiered cache (synchronous snapshot +
+        materialize). Returns a nested [segment][unit]{"k","v"} structure of
+        host numpy arrays, shape (n_layers, page_size, H, hd) each."""
+        return self.materialize(self.snapshot_block(bid))
+
+    @staticmethod
+    def stage_payload(payload):
+        """Host->device upload of a block payload (the H2D half of swap-in)
+        without touching the page pool — safe on the copy worker. The cheap
+        donated scatter into the pool (``write_block``) stays with the pool
+        owner. Idempotent on already-staged device arrays."""
+        return jax.tree_util.tree_map(
+            lambda a: jax.device_put(jnp.asarray(a)), payload)
 
     def _write_block_impl(self, pages, bid, payload):
         new_pages = []
@@ -216,12 +242,11 @@ class PagedRunner:
 
     def write_block(self, bid: int, payload) -> None:
         """Host->device restore of one KV page (the swap-in half): stages
-        the payload via ``jax.device_put`` and scatters it into the pool at
-        ``bid`` inside a donated jit, so the update happens in place — the
-        block table indirection makes the new bid transparent to
-        attention."""
-        staged = jax.tree_util.tree_map(
-            lambda a: jax.device_put(jnp.asarray(a)), payload)
+        the payload via ``jax.device_put`` (a no-op if the copy worker
+        already uploaded it) and scatters it into the pool at ``bid`` inside
+        a donated jit, so the update happens in place — the block table
+        indirection makes the new bid transparent to attention."""
+        staged = self.stage_payload(payload)
         self.pages = self._write_block_jit(self.pages, jnp.int32(bid),
                                            staged)
 

@@ -140,7 +140,8 @@ def stack_init(rng, cfg, dtype):
         if stype == "scan":
             rngs = jax.random.split(sub, n)
             stacked = tuple(
-                jax.vmap(lambda r, k=kind, i=ki: block_init(k, jax.random.fold_in(r, i), cfg, dtype))(rngs)
+                jax.vmap(lambda r, k=kind, i=ki: block_init(
+                    k, jax.random.fold_in(r, i), cfg, dtype))(rngs)
                 for ki, kind in enumerate(unit))
             segs.append(stacked)
         else:

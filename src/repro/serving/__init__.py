@@ -2,7 +2,8 @@
 admission control over engine and cluster backends (ISSUE 3)."""
 from repro.serving.admission import AdmissionConfig, AdmissionController
 from repro.serving.backends import ClusterBackend, EngineBackend, make_backend
-from repro.serving.events import EventBus, LiveMetrics, SwapEvent
+from repro.serving.events import (EventBus, LiveMetrics, OverlapEvent,
+                                  SwapEvent)
 from repro.serving.handle import (TERMINAL_STATUSES, HandleStatus,
                                   RequestHandle, RequestResult, TokenEvent)
 from repro.serving.service import EchoService
@@ -10,6 +11,7 @@ from repro.serving.service import EchoService
 __all__ = [
     "AdmissionConfig", "AdmissionController", "ClusterBackend", "EchoService",
     "EngineBackend", "EventBus", "HandleStatus", "LiveMetrics",
-    "RequestHandle", "RequestResult", "SwapEvent", "TERMINAL_STATUSES",
+    "OverlapEvent", "RequestHandle", "RequestResult", "SwapEvent",
+    "TERMINAL_STATUSES",
     "TokenEvent", "make_backend",
 ]

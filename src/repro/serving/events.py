@@ -26,6 +26,20 @@ class SwapEvent:
     handle: Optional[RequestHandle] = None
 
 
+@dataclass(frozen=True)
+class OverlapEvent:
+    """One iteration's swap/compute overlap accounting: ``transfer`` seconds
+    of PCIe traffic were put on the copy stream, of which only ``exposed``
+    seconds reached the clock (the tail compute could not hide)."""
+    transfer: float
+    exposed: float
+    t: float
+
+    @property
+    def hidden(self) -> float:
+        return max(self.transfer - self.exposed, 0.0)
+
+
 class EventBus:
     """Named-event subscriptions. ``token``/``first_token`` callbacks get a
     ``TokenEvent``; ``finish``/``preempt``/``abort``/``shed``/``requeue``
@@ -33,7 +47,7 @@ class EventBus:
     ``SwapEvent``. Callbacks run synchronously at iteration end."""
 
     EVENTS = ("token", "first_token", "finish", "preempt", "abort", "shed",
-              "requeue", "swap_in", "swap_out")
+              "requeue", "swap_in", "swap_out", "swap_overlap")
 
     def __init__(self):
         self._subs: Dict[str, List[Callable]] = {e: [] for e in self.EVENTS}
@@ -77,6 +91,11 @@ class EventBus:
     def on_swap_out(self, cb: Callable[[SwapEvent], None]) -> Callable:
         return self.subscribe("swap_out", cb)
 
+    def on_swap_overlap(self, cb: Callable[[OverlapEvent], None]) -> Callable:
+        """Per-iteration swap/compute overlap accounting (transfer vs the
+        exposed tail that actually reached the clock)."""
+        return self.subscribe("swap_overlap", cb)
+
     # emission ------------------------------------------------------------
     def emit(self, event: str, payload) -> None:
         for cb in list(self._subs[event]):
@@ -105,6 +124,8 @@ class LiveMetrics:
         self.swap_outs = 0
         self.swapped_in_tokens = 0          # recompute avoided via host KV
         self.swapped_out_tokens = 0
+        self.swap_transfer_time = 0.0       # PCIe seconds on the copy stream
+        self.swap_exposed_time = 0.0        # the tail NOT hidden by compute
         self.completed_offline_tokens = 0   # prompt + generated, on finish
         self.last_offline_finish_t: Optional[float] = None
         self._slo = {"ttft": [0, 0], "tpot": [0, 0]}    # kind -> [ok, n]
@@ -117,6 +138,7 @@ class LiveMetrics:
         bus.on_requeue(self._requeue)
         bus.on_swap_in(self._swap_in)
         bus.on_swap_out(self._swap_out)
+        bus.on_swap_overlap(self._swap_overlap)
 
     # ------------------------------------------------------------- handlers
     def _token(self, ev: TokenEvent) -> None:
@@ -165,7 +187,19 @@ class LiveMetrics:
         self.swap_outs += 1
         self.swapped_out_tokens += ev.tokens
 
+    def _swap_overlap(self, ev: "OverlapEvent") -> None:
+        self.swap_transfer_time += ev.transfer
+        self.swap_exposed_time += ev.exposed
+
     # ------------------------------------------------------------- queries
+    def swap_hidden_frac(self) -> float:
+        """Fraction of swap traffic the overlap hid (0.0 serial/swap-free),
+        matching ``EngineStats.swap_hidden_frac`` at end of run."""
+        if self.swap_transfer_time <= 0.0:
+            return 0.0
+        return max(1.0 - self.swap_exposed_time / self.swap_transfer_time,
+                   0.0)
+
     def slo_attainment(self, kind: str = "ttft") -> float:
         ok, n = self._slo[kind]
         return ok / n if n else 1.0

@@ -28,7 +28,8 @@ from repro.core.request import SLO, Request, TaskType
 from repro.serving.admission import (ADMIT, DEFER, SHED, AdmissionConfig,
                                      AdmissionController)
 from repro.serving.backends import make_backend
-from repro.serving.events import EventBus, LiveMetrics, SwapEvent
+from repro.serving.events import (EventBus, LiveMetrics, OverlapEvent,
+                                  SwapEvent)
 from repro.serving.handle import RequestHandle, TokenEvent
 
 
@@ -52,6 +53,10 @@ class _ServiceListener(EngineListener):
 
     def on_swap_out(self, n_tokens: int, t: float) -> None:
         self.service._on_swap_out(n_tokens, t)
+
+    def on_swap_overlap(self, transfer_s: float, exposed_s: float,
+                        t: float) -> None:
+        self.service._on_swap_overlap(transfer_s, exposed_s, t)
 
 
 class EchoService:
@@ -249,6 +254,11 @@ class EchoService:
 
     def _on_swap_out(self, n_tokens: int, t: float) -> None:
         self.events.emit("swap_out", SwapEvent(tokens=n_tokens, t=t))
+
+    def _on_swap_overlap(self, transfer_s: float, exposed_s: float,
+                         t: float) -> None:
+        self.events.emit("swap_overlap", OverlapEvent(transfer=transfer_s,
+                                                      exposed=exposed_s, t=t))
 
     def _on_finish(self, req: Request, t: float) -> None:
         handle = self._handle_for(req)

@@ -1,7 +1,6 @@
 """Causal-LM training step (the train_4k workload shape)."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

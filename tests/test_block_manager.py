@@ -4,8 +4,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.block_manager import (BlockManager, ONLINE_FINISHED_PRIORITY,
-                                      chain_hash)
+from repro.core.block_manager import BlockManager, chain_hash
 from repro.core.request import Request, TaskType
 
 

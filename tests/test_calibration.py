@@ -3,7 +3,7 @@ clocks, drift-triggered refits, convergence, and heterogeneous fleets."""
 import numpy as np
 
 from repro.core import (ECHO, ECHO_C, SLO, EchoEngine, OnlineCalibrator,
-                        PerturbedTimeModel, Request, TaskType, TimeModel)
+                        TimeModel)
 from repro.data import make_offline_corpus, make_online_requests
 
 

@@ -205,17 +205,28 @@ def test_swap_in_rejected_when_transfer_loses_to_recompute():
 
 
 def test_swap_charged_against_slo_budget():
-    """Plans carrying swap traffic must price it: est_time includes the
-    PCIe term, so the same plan costs more on a slower link."""
-    eng = _sim_engine(256)
-    sched = eng.scheduler
+    """Plans carrying swap traffic must price it. On the serial clock
+    (overlap off) est_time adds the full PCIe term; under overlap only the
+    exposed transfer tail plus the launch overhead is charged — never more
+    than the serial price, never less than compute alone."""
     from repro.core.scheduler import Plan
+    eng = _sim_engine(256, tm=TimeModel.a100(swap_overlap=False))
+    sched = eng.scheduler
     r = _req(range(64))
     plan = Plan(prefills=[(r, 32)], swap_ins=[(r, 32)])
     with_swap = sched._estimate(plan)
     plan2 = Plan(prefills=[(r, 32)])
     without = sched._estimate(plan2)
     assert with_swap == pytest.approx(without + eng.tm.swap_time(32))
+
+    eng = _sim_engine(256)                    # overlap on by default
+    sched = eng.scheduler
+    plan = Plan(prefills=[(r, 32)], swap_ins=[(r, 32)])
+    overlapped = sched._estimate(plan)
+    compute = sched._estimate(Plan(prefills=[(r, 32)]))
+    assert overlapped == pytest.approx(
+        eng.tm.overlapped_iteration_time(compute, eng.tm.swap_time(32)))
+    assert compute < overlapped <= compute + eng.tm.swap_time(32)
 
 
 # ------------------------------------------------------- abort across tiers

@@ -1,10 +1,9 @@
 """Scheduler behaviour (§4.1): FCFS online, preemption, SLO shedding,
 KV-aware offline selection."""
-import pytest
 
 from repro.core.block_manager import BlockManager
 from repro.core.estimator import TimeModel
-from repro.core.policies import BS, ECHO, PolicyConfig
+from repro.core.policies import BS, ECHO
 from repro.core.radix_pool import OfflinePool
 from repro.core.request import SLO, Request, RequestState, TaskType
 from repro.core.scheduler import Scheduler

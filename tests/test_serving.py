@@ -2,15 +2,13 @@
 streaming token events, mid-flight cancellation with zero leaked blocks,
 and admission-control backpressure — on engine and cluster backends."""
 import numpy as np
-import pytest
 
 from repro.cluster import ClusterSimulator
 from repro.core import (ECHO, SLO, EchoEngine, Request, RequestState,
                         TaskType, TimeModel)
 from repro.core.simulator import clone_requests
 from repro.data import make_offline_corpus, make_online_requests
-from repro.serving import (AdmissionConfig, EchoService, HandleStatus,
-                           RequestHandle)
+from repro.serving import AdmissionConfig, EchoService, HandleStatus
 
 TM_KW = dict()
 

@@ -3,8 +3,6 @@ _axes_fit/_leaf_spec only consult mesh.shape)."""
 from types import SimpleNamespace
 
 import jax
-import numpy as np
-import pytest
 
 from repro.launch.sharding import _axes_fit, _leaf_spec
 

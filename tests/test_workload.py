@@ -3,8 +3,8 @@ import numpy as np
 
 from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
 from repro.data.workload import sharing_rate
-from repro.core.simulator import estimate_capacity, simulate
-from repro.core import ECHO, SLO, TimeModel
+from repro.core.simulator import estimate_capacity
+from repro.core import SLO, TimeModel
 
 
 def test_offline_sharing_rate_high():
