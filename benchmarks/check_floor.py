@@ -28,7 +28,8 @@ SLO_KEYS = ("slo_ttft", "slo_tpot")
 BOOL_GATES = ("swap_wins", "overlap_wins")
 
 
-def check(current: dict, baseline: dict, tolerance: float) -> list:
+def check(current: dict, baseline: dict, tolerance: float,
+          obs_tolerance: float = 0.05) -> list:
     """Returns a list of human-readable violations (empty = pass)."""
     violations = []
     for mode, base in baseline.items():
@@ -53,6 +54,15 @@ def check(current: dict, baseline: dict, tolerance: float) -> list:
     for gate in BOOL_GATES:
         if base_head.get(gate) and not cur_head.get(gate):
             violations.append(f"headline.{gate}: regressed True -> False")
+    # observability must stay near-free: instrumented/bare wall ratio of the
+    # swap mode (gated whenever the current run measured it — no baseline
+    # entry needed, the ceiling is absolute)
+    obs = cur_head.get("obs_overhead")
+    if obs is not None and obs > 1.0 + obs_tolerance:
+        violations.append(
+            f"headline.obs_overhead: x{obs:.3f} > ceiling "
+            f"x{1.0 + obs_tolerance:.2f} (tracing+metrics must cost "
+            f"<= {obs_tolerance:.0%} wall time)")
     return violations
 
 
@@ -65,12 +75,16 @@ def main() -> None:
                     help="committed baseline JSON")
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="relative throughput / absolute SLO slack (0.10)")
+    ap.add_argument("--obs-tolerance", type=float, default=0.05,
+                    help="max fractional wall-time overhead of the "
+                         "instrumented run over the bare one (0.05)")
     args = ap.parse_args()
     with open(args.current) as f:
         current = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
-    violations = check(current, baseline, args.tolerance)
+    violations = check(current, baseline, args.tolerance,
+                       obs_tolerance=args.obs_tolerance)
     if violations:
         print("benchmark floor violated:", file=sys.stderr)
         for v in violations:

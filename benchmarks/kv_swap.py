@@ -57,7 +57,48 @@ def _run(host_blocks: int, swap_overlap: bool, overrides=None,
     return eng, stats, online, offline
 
 
-def results(smoke: bool = False):
+def obs_overhead(overrides=None, max_iters: int = 60_000,
+                 trace_out=None, metrics_out=None, pairs: int = 2):
+    """Wall-time ratio of the instrumented "swap" run over the bare one —
+    the ISSUE-6 bounded-overhead gate (check_floor enforces <= 1 + tol).
+
+    Runs ``pairs`` alternating bare/instrumented repeats and compares the
+    best of each, which strips one-off machine noise while still charging
+    every per-iteration cost the tracer and probes add. The last
+    instrumented run's artifacts are optionally written (CI uploads them)."""
+    import time as _t
+
+    from repro.obs import MetricsRegistry, Tracer, instrument_engine
+
+    ov = dict(OVERRIDES)
+    ov.update(overrides or {})
+    bare, instr = [], []
+    tracer = registry = None
+    for _ in range(pairs):
+        eng, _, _, p = build_engine(ECHO, seed=SEED,
+                                    host_kv_blocks=HOST_BLOCKS,
+                                    tm_kw=dict(swap_overlap=True), **ov)
+        t0 = _t.perf_counter()
+        eng.run(max_iters=max_iters, until_time=p["duration"] * 6)
+        bare.append(_t.perf_counter() - t0)
+
+        eng, _, _, p = build_engine(ECHO, seed=SEED,
+                                    host_kv_blocks=HOST_BLOCKS,
+                                    tm_kw=dict(swap_overlap=True), **ov)
+        registry, tracer = MetricsRegistry(), Tracer()
+        instrument_engine(eng, registry, tracer)
+        t0 = _t.perf_counter()
+        eng.run(max_iters=max_iters, until_time=p["duration"] * 6)
+        instr.append(_t.perf_counter() - t0)
+    if trace_out and tracer is not None:
+        tracer.write(trace_out)
+    if metrics_out and registry is not None:
+        registry.write(metrics_out)
+    return {"obs_overhead": min(instr) / max(min(bare), 1e-9),
+            "bare_wall": min(bare), "instrumented_wall": min(instr)}
+
+
+def results(smoke: bool = False, trace_out=None, metrics_out=None):
     overrides = dict(SMOKE) if smoke else {}
     max_iters = overrides.pop("max_iters", 60_000)
     out = {}
@@ -109,6 +150,11 @@ def results(smoke: bool = False):
             and sw["slo_ttft"] >= ser["slo_ttft"] - 1e-9
             and sw["slo_tpot"] >= ser["slo_tpot"] - 1e-9),
     }
+    # acceptance gate 3 (ISSUE 6): observability must stay cheap — re-run
+    # the swap mode with tracer + probes attached and compare wall clocks
+    out["headline"].update(obs_overhead(
+        overrides, max_iters, trace_out=trace_out, metrics_out=metrics_out,
+        pairs=1 if smoke else 2))
     return out
 
 
@@ -131,6 +177,7 @@ def rows():
     out.append(("kv_swap.overlap_hidden_frac", 0.0,
                 f"{h['overlap_hidden_frac']:.3f}"))
     out.append(("kv_swap.overlap_wins", 0.0, str(h["overlap_wins"])))
+    out.append(("kv_swap.obs_overhead", 0.0, f"{h['obs_overhead']:.3f}"))
     return out
 
 
@@ -143,8 +190,15 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-scale run (CI): exercises the swap path, "
                          "skips the headline win checks")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the instrumented run's Chrome trace here "
+                         "(CI artifact)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the instrumented run's metrics snapshot "
+                         "here (CI artifact)")
     args = ap.parse_args()
-    res = results(smoke=args.smoke)
+    res = results(smoke=args.smoke, trace_out=args.trace_out,
+                  metrics_out=args.metrics_out)
     for mode, _, _ in MODES:
         r = res[mode]
         print(f"{mode:>11}: tput {r['offline_throughput']:8.1f} tok/s  "
@@ -160,6 +214,13 @@ def main():
     print(f"          overlap x{h['overlap_tput_ratio']:.2f} vs serial "
           f"(hidden {h['overlap_hidden_frac']:.0%})  "
           f"overlap_wins={h['overlap_wins']}")
+    print(f"          obs overhead x{h['obs_overhead']:.3f} "
+          f"({h['bare_wall']:.2f}s bare, "
+          f"{h['instrumented_wall']:.2f}s instrumented)")
+    if args.trace_out:
+        print(f"wrote {args.trace_out}")
+    if args.metrics_out:
+        print(f"wrote {args.metrics_out}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(res, f, indent=2)

@@ -57,6 +57,10 @@ class Router:
         self._rr = 0
         self.stats = RouterStats()
         self._block_size = self.replicas[0].engine.bm.block_size
+        # observability taps (repro.obs sets these): called per placement /
+        # per stolen request with the engine-clock timestamp of the move
+        self.on_dispatch = None   # (req, replica_id, t)
+        self.on_steal = None      # (req, from_id, to_id, t)
 
     # ------------------------------------------------------------- dispatch
     def dispatch(self, req: Request) -> Replica:
@@ -71,6 +75,8 @@ class Router:
             self.stats.per_replica_offline[rep.id] = \
                 self.stats.per_replica_offline.get(rep.id, 0) + 1
         rep.submit(req)
+        if self.on_dispatch is not None:
+            self.on_dispatch(req, rep.id, rep.engine.now)
         return rep
 
     def _place_online(self, req: Request) -> Replica:
@@ -143,6 +149,8 @@ class Router:
                     target = calmest
                 target.submit(req)
                 target.stolen_in += 1
+                if self.on_steal is not None:
+                    self.on_steal(req, rep.id, target.id, target.engine.now)
             self.stats.steals += 1
             self.stats.stolen_requests += len(moved)
             moved_total += len(moved)

@@ -232,6 +232,23 @@ class BlockManager:
                 out[key] += 1
         return out
 
+    def occupancy_snapshot(self) -> Dict[str, int]:
+        """Gauge-friendly occupancy view for the observability probes:
+        device free / running / cached block counts, the §5.3 running-KV
+        cap, and the host tier's fill (zero capacity when no tier)."""
+        return {
+            "free": len(self.free),
+            "running": self.running_blocks,
+            "cached": self.cached_blocks,
+            "threshold": self.threshold_blocks,
+            "total": self.num_blocks,
+            "host_used": len(self.host) if self.host is not None else 0,
+            "host_capacity": (self.host.capacity
+                              if self.host is not None else 0),
+            "host_reserve": (self.host.reserve
+                             if self.host is not None else 0),
+        }
+
     # ------------------------------------------------------------- priority
     def _priority(self, blk: Block) -> float:
         if not self.task_aware:

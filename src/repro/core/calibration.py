@@ -15,7 +15,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, List, Optional, Sequence, Tuple
 
 from repro.core.estimator import TimeModel
 
@@ -78,6 +78,10 @@ class OnlineCalibrator:
         # bounded so a long-running server cannot grow without limit; the
         # default keeps every benchmark-length run intact
         self.history: Deque[CalibrationSample] = deque(maxlen=history_limit)
+        # observability tap: called with ("iter"|"swap", rel_err) per sample
+        # so drift probes can histogram residuals live instead of scraping
+        # `history` after the run (repro.obs.probes sets this)
+        self.on_residual: Optional[Callable[[str, float], None]] = None
 
     @classmethod
     def passive(cls, tm: TimeModel, **kw) -> "OnlineCalibrator":
@@ -113,6 +117,8 @@ class OnlineCalibrator:
         elif spans and lens:
             self._mixed.append((spans, lens, observed))
 
+        if self.on_residual is not None:
+            self.on_residual("iter", rel)
         if self.drifting():
             self.refit()
         return rel
@@ -135,6 +141,8 @@ class OnlineCalibrator:
         self._swap.append((n_tokens, observed))
         self.n_swap_observed += 1
         self._since_swap_refit += 1
+        if self.on_residual is not None:
+            self.on_residual("swap", rel)
         if self.swap_drifting():
             self.refit_swap()
         return rel

@@ -60,6 +60,22 @@ class IterationRecord:
     swap_exposed_time: float = 0.0   # the tail NOT hidden under compute
 
 
+@dataclass
+class IterationDetail:
+    """What the observability layer needs beyond ``IterationRecord``: the
+    plan's shape and the estimate it was scored with. Built only when a
+    listener overrides ``on_iteration`` — the plain serving path never
+    pays for it."""
+    t_start: float
+    t_end: float
+    schedule_wall: float           # wall seconds spent in scheduler.schedule
+    compute_time: float            # the clock's compute leg (no transfers)
+    predicted_time: float          # scheduler estimate of the iteration
+    admitted: List[Request]        # newly admitted to the running batch
+    prefill_spans: List[Tuple[Request, int, int]]   # (req, start, end)
+    decodes: List[Request]
+
+
 class EngineListener:
     """Engine-level lifecycle hooks, called synchronously from ``step()``.
 
@@ -82,6 +98,13 @@ class EngineListener:
 
     def on_swap_overlap(self, transfer_s: float, exposed_s: float,
                         t: float) -> None: ...
+
+    def on_iteration(self, rec: "IterationRecord",
+                     detail: "IterationDetail") -> None:
+        """Per-iteration observability hook (tracing + estimator-drift
+        probes). The engine only builds ``detail`` when some attached
+        listener overrides this method."""
+        ...
 
 
 class _SwapStager:
@@ -512,8 +535,10 @@ class EchoEngine:
     # ------------------------------------------------------------- step
     def step(self) -> Optional[IterationRecord]:
         self._pull_arrivals()
+        tsched = time.perf_counter()
         plan = self.scheduler.schedule(self.now)
         ts0 = time.perf_counter()
+        schedule_wall = ts0 - tsched
         swap_out_tokens = self._execute_swaps() + self._pending_swap_out
         swap_wall = time.perf_counter() - ts0 + self._pending_swap_wall
         self._pending_swap_out = 0
@@ -670,6 +695,7 @@ class EchoEngine:
                     cap_blocks=self.bm.host.capacity,
                     inflight_blocks=(st.inflight_blocks()
                                      if st is not None else 0))
+        t_start = self.now - iter_time
         rec = IterationRecord(
             t=self.now,
             n_prefill=len(plan.prefills),
@@ -689,6 +715,21 @@ class EchoEngine:
             swap_exposed_time=swap_exposed,
         )
         self.stats.iterations.append(rec)
+        base_hook = EngineListener.on_iteration
+        detailed = [l for l in self.listeners
+                    if type(l).on_iteration is not base_hook]
+        if detailed:
+            detail = IterationDetail(
+                t_start=t_start, t_end=self.now,
+                schedule_wall=schedule_wall,
+                compute_time=compute_time,
+                predicted_time=plan.est_time,
+                admitted=plan.admitted,
+                prefill_spans=[(r, s, e) for (r, _), (s, e)
+                               in zip(plan.prefills, spans)],
+                decodes=decodes)
+            for l in detailed:
+                l.on_iteration(rec, detail)
         return rec
 
     # ------------------------------------------------------------- loops

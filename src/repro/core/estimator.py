@@ -304,18 +304,30 @@ class MemoryPredictor:
     window: float = 3600.0          # seconds of history
     k_sigma: float = 2.0
     _obs: Deque[Tuple[float, float]] = field(default_factory=deque)
+    # running first/second moments of the window so predict() is O(1):
+    # callers (threshold + host reserve + the drift probes) hit it several
+    # times per engine iteration and the window can hold thousands of
+    # samples
+    _sum: float = 0.0
+    _sumsq: float = 0.0
 
     def observe(self, now: float, online_kv_tokens: float) -> None:
         self._obs.append((now, online_kv_tokens))
+        self._sum += online_kv_tokens
+        self._sumsq += online_kv_tokens * online_kv_tokens
         cutoff = now - self.window
         while self._obs and self._obs[0][0] < cutoff:
-            self._obs.popleft()
+            _, v = self._obs.popleft()
+            self._sum -= v
+            self._sumsq -= v * v
 
     def predict(self) -> float:
-        if not self._obs:
+        n = len(self._obs)
+        if n == 0:
             return 0.0
-        vals = np.array([v for _, v in self._obs], np.float64)
-        return float(vals.mean() + self.k_sigma * vals.std())
+        mean = self._sum / n
+        var = max(self._sumsq / n - mean * mean, 0.0)
+        return float(mean + self.k_sigma * math.sqrt(var))
 
     def threshold_blocks(self, total_blocks: int, block_size: int,
                          current_online_tokens: float = 0.0,

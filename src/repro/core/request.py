@@ -52,6 +52,7 @@ class Request:
 
     # metrics
     first_token_time: Optional[float] = None
+    first_scheduled_time: Optional[float] = None   # first batch admission
     finish_time: Optional[float] = None
     token_times: List[float] = field(default_factory=list)
 
@@ -66,10 +67,13 @@ class Request:
         preemption the generated tokens are re-prefilled as prompt (vLLM)."""
         return self.prompt + tuple(self.output_tokens)
 
-    def admit(self) -> None:
-        """(Re-)admission: prefill covers all currently-known tokens."""
+    def admit(self, now: Optional[float] = None) -> None:
+        """(Re-)admission: prefill covers all currently-known tokens.
+        The first admission is stamped for queue-delay metrics."""
         self.prefill_target_len = len(self.full_tokens)
         self.state = RequestState.RUNNING
+        if now is not None and self.first_scheduled_time is None:
+            self.first_scheduled_time = now
 
     @property
     def prefill_done(self) -> bool:
@@ -127,3 +131,9 @@ class Request:
         if self.n_output < 2:
             return None
         return (self.token_times[-1] - self.token_times[0]) / (self.n_output - 1)
+
+    def queue_delay(self) -> Optional[float]:
+        """Arrival to first batch admission (None if never scheduled)."""
+        if self.first_scheduled_time is None:
+            return None
+        return self.first_scheduled_time - self.arrival_time

@@ -28,6 +28,7 @@ class Plan:
     decodes: List[Request] = field(default_factory=list)
     preempted: List[Request] = field(default_factory=list)
     swap_ins: List[Tuple[Request, int]] = field(default_factory=list)  # (req, tokens)
+    admitted: List[Request] = field(default_factory=list)  # newly running
     est_time: float = 0.0
     benefit: float = 0.0
     punishment: float = 0.0
@@ -378,7 +379,7 @@ class Scheduler:
                 if not self._preempt_one_offline(now, plan):
                     break
                 continue
-            req.admit()
+            req.admit(now)
             chunk = self._plan_prefill_chunk(req, now, respect_threshold=False,
                                              plan=plan)
             while chunk is None and self._preempt_one_offline(now, plan):
@@ -403,6 +404,7 @@ class Scheduler:
                     break
             self.online_queue.popleft()
             self.running.append(req)
+            plan.admitted.append(req)
             if chunk > 0:
                 plan.prefills.append((req, chunk))
 
@@ -561,7 +563,7 @@ class Scheduler:
                                     plan.swap_in_tokens + best.host_take)
             if self.policy.use_estimator and t_new > budget:
                 break
-            req.admit()
+            req.admit(now)
             chunk = self._plan_prefill_chunk(req, now, respect_threshold=True,
                                              plan=plan)
             if chunk is None:
@@ -571,6 +573,7 @@ class Scheduler:
                 break
             self.pool.remove(req)
             self.running.append(req)
+            plan.admitted.append(req)
             if chunk > 0:
                 plan.prefills.append((req, chunk))
                 if not req.prefill_done:

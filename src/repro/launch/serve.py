@@ -79,6 +79,31 @@ def admission_config(args):
     return cfg if cfg.active else None
 
 
+def setup_obs(args, service: EchoService):
+    """Attach the observability layer when --trace-out/--metrics-out ask
+    for it. Returns (tracer, registry), both None when disabled."""
+    if not (args.trace_out or args.metrics_out):
+        return None, None
+    from repro.obs import MetricsRegistry, Tracer
+    tracer = Tracer(cap=args.trace_cap) if args.trace_out else None
+    registry = MetricsRegistry()
+    service.instrument(registry, tracer)
+    return tracer, registry
+
+
+def write_obs(args, tracer, registry) -> None:
+    if tracer is not None and args.trace_out:
+        tracer.write(args.trace_out)
+        print(f"trace: {args.trace_out} ({len(tracer._events)} events, "
+              f"{tracer.dropped_events} dropped; "
+              f"{len(tracer.preempted_rids())} preempted / "
+              f"{len(tracer.swapped_rids())} swapped requests) — "
+              "load at https://ui.perfetto.dev")
+    if registry is not None and args.metrics_out:
+        registry.write(args.metrics_out)
+        print(f"metrics: {args.metrics_out}")
+
+
 def print_report(service: EchoService, stats, online, offline) -> None:
     """One reporter for both the single-engine and the cluster path — the
     metric surface is identical; only the per-engine detail lines vary."""
@@ -91,6 +116,14 @@ def print_report(service: EchoService, stats, online, offline) -> None:
           f"tok/s (virtual)")
     print(f"SLO attainment: TTFT {stats.slo_attainment('ttft'):.3f}  "
           f"TPOT {stats.slo_attainment('tpot'):.3f}")
+    pcts = service.live.percentiles()
+    if pcts:
+        print("latency percentiles (s):")
+        for name in ("ttft", "tpot", "queue_delay"):
+            if name in pcts:
+                v = pcts[name]
+                print(f"  {name:>11}: p50 {v['p50']:.4f}  "
+                      f"p90 {v['p90']:.4f}  p99 {v['p99']:.4f}")
     if service.live.shed or service.live.aborted:
         print(f"admission: shed {service.live.shed}  "
               f"aborted {service.live.aborted}")
@@ -224,11 +257,13 @@ def serve_cluster(args) -> None:
                            host_kv_blocks=host_kv_blocks(args),
                            seed=args.seed)
     service = EchoService(sim, admission=admission_config(args))
+    tracer, registry = setup_obs(args, service)
     stats = service.drive(online + offline, until_time=args.duration * 4)
 
     print(f"policy={policy.name} router={args.router} "
           f"replicas={args.replicas}")
     print_report(service, stats, online, offline)
+    write_obs(args, tracer, registry)
 
 
 def main() -> None:
@@ -239,10 +274,14 @@ def main() -> None:
                          "dry-run is model-free")
     ap.add_argument("--policy", choices=list(POLICY_BY_NAME), default="Echo")
     ap.add_argument("--duration", type=float, default=20.0)
-    ap.add_argument("--num-blocks", type=int, default=192)
-    ap.add_argument("--online-rate", type=float, default=2.0)
-    ap.add_argument("--n-docs", type=int, default=6)
-    ap.add_argument("--questions", type=int, default=8)
+    # the default workload is sized so the offline prefix working set
+    # exceeds the device cache under online bursts — the paper's co-serving
+    # regime, where preemption and host-tier swaps actually occur (and show
+    # up on a --trace-out timeline)
+    ap.add_argument("--num-blocks", type=int, default=64)
+    ap.add_argument("--online-rate", type=float, default=4.0)
+    ap.add_argument("--n-docs", type=int, default=12)
+    ap.add_argument("--questions", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--replicas", type=int, default=1,
                     help="N>1: dry-run a virtual N-replica cluster")
@@ -271,11 +310,11 @@ def main() -> None:
     ap.add_argument("--offline-cap", type=int, default=None,
                     help="admission control: soft cap on the offline "
                          "backlog; excess work is deferred, not dropped")
-    ap.add_argument("--host-kv-gb", type=float, default=0.0,
+    ap.add_argument("--host-kv-gb", type=float, default=0.5,
                     help="host-memory KV swap tier per replica, in GB: "
                          "evicted blocks with future reuse are parked on "
                          "the host and restored over PCIe instead of "
-                         "recomputed (0 = recompute-only, the old behavior)")
+                         "recomputed (0 or --no-swap = recompute-only)")
     ap.add_argument("--pcie-gbps", type=float, default=25.0,
                     help="effective host<->device bandwidth for the swap "
                          "tier's transfer-time terms (25 ~ PCIe 4.0 x16)")
@@ -287,6 +326,16 @@ def main() -> None:
                          "iteration instead of overlapping it with compute "
                          "on an async copy stream (the pre-overlap cost "
                          "model; also disables the wall-path double buffer)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(request lifecycle spans + schedule/kernel/swap "
+                         "tracks); load the file at https://ui.perfetto.dev")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics snapshot: Prometheus text, or a "
+                         "structured JSON dump for .json paths")
+    ap.add_argument("--trace-cap", type=int, default=200_000,
+                    help="trace ring-buffer capacity in events; oldest "
+                         "events drop beyond it (bounded memory)")
     args = ap.parse_args()
 
     if args.replicas > 1:
@@ -327,10 +376,12 @@ def main() -> None:
                      clock_model=clocks[0] if clocks else None,
                      host_kv_blocks=host_kv_blocks(args, cfg))
     service = EchoService(eng, admission=admission_config(args))
+    tracer, registry = setup_obs(args, service)
     stats = service.drive(online + offline, max_iters=100_000,
                           until_time=args.duration * 4)
     print(f"policy={policy.name}")
     print_report(service, stats, online, offline)
+    write_obs(args, tracer, registry)
 
 
 if __name__ == "__main__":

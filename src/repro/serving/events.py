@@ -9,10 +9,14 @@ finished counts) incrementally from events, matching the post-hoc
 """
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
+from repro.obs.metrics import Histogram, LATENCY_BUCKETS
 from repro.serving.handle import RequestHandle, TokenEvent
+
+logger = logging.getLogger(__name__)
 
 
 @dataclass(frozen=True)
@@ -51,6 +55,10 @@ class EventBus:
 
     def __init__(self):
         self._subs: Dict[str, List[Callable]] = {e: [] for e in self.EVENTS}
+        # a raising subscriber must not take the serving loop down with it:
+        # emit() swallows the exception, counts it here, and keeps going
+        self.dropped_callbacks = 0
+        self._warned: set = set()
 
     def subscribe(self, event: str, cb: Callable) -> Callable:
         if event not in self._subs:
@@ -99,7 +107,16 @@ class EventBus:
     # emission ------------------------------------------------------------
     def emit(self, event: str, payload) -> None:
         for cb in list(self._subs[event]):
-            cb(payload)
+            try:
+                cb(payload)
+            except Exception:
+                self.dropped_callbacks += 1
+                key = (event, cb)
+                if key not in self._warned:   # log once per (event, cb)
+                    self._warned.add(key)
+                    logger.warning("subscriber %r raised on %r; suppressing"
+                                   " further warnings for this pair",
+                                   cb, event, exc_info=True)
 
 
 class LiveMetrics:
@@ -129,6 +146,17 @@ class LiveMetrics:
         self.completed_offline_tokens = 0   # prompt + generated, on finish
         self.last_offline_finish_t: Optional[float] = None
         self._slo = {"ttft": [0, 0], "tpot": [0, 0]}    # kind -> [ok, n]
+        # pre-bucketed latency distributions (p50/p90/p99 queries); recorded
+        # on finish for online requests, matching the attainment denominator
+        self.hists: Dict[str, Histogram] = {
+            "ttft": Histogram("ttft_seconds", "time to first token",
+                              buckets=LATENCY_BUCKETS),
+            "tpot": Histogram("tpot_seconds", "time per output token",
+                              buckets=LATENCY_BUCKETS),
+            "queue_delay": Histogram("queue_delay_seconds",
+                                     "arrival to first batch admission",
+                                     buckets=LATENCY_BUCKETS),
+        }
         bus.on_token(self._token)
         bus.on_first_token(self._first_token)
         bus.on_finish(self._finish)
@@ -152,10 +180,17 @@ class LiveMetrics:
 
     def _finish(self, handle: RequestHandle) -> None:
         req = handle.request
+        qd = req.queue_delay()
+        if qd is not None:
+            self.hists["queue_delay"].observe(qd)
         if req.is_online:
             self.finished_online += 1
+            ttft, tpot = req.ttft(), req.tpot()
+            if ttft is not None:
+                self.hists["ttft"].observe(ttft)
+            if tpot is not None:
+                self.hists["tpot"].observe(tpot)
             if req.slo is not None:
-                ttft, tpot = req.ttft(), req.tpot()
                 if ttft is not None:
                     self._slo["ttft"][1] += 1
                     self._slo["ttft"][0] += ttft <= req.slo.ttft
@@ -211,3 +246,18 @@ class LiveMetrics:
             return 0.0
         return self.completed_offline_tokens / (self.last_offline_finish_t
                                                 + 1e-9)
+
+    def percentile(self, metric: str, q: float) -> Optional[float]:
+        """Bucket-interpolated quantile of ``ttft`` / ``tpot`` /
+        ``queue_delay``; None before the first observation."""
+        return self.hists[metric].percentile(q)
+
+    def percentiles(self, qs=(0.5, 0.9, 0.99)) -> Dict[str, Dict[str, float]]:
+        """{"ttft": {"p50": ..., "p90": ..., "p99": ...}, ...} — metrics
+        with no observations yet are omitted."""
+        out: Dict[str, Dict[str, float]] = {}
+        for name, h in self.hists.items():
+            vals = {f"p{int(q * 100)}": h.percentile(q) for q in qs}
+            if all(v is not None for v in vals.values()):
+                out[name] = vals
+        return out

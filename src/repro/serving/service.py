@@ -228,6 +228,20 @@ class EchoService:
     def stats(self):
         return self.backend.stats()
 
+    # ------------------------------------------------------------- obs
+    def instrument(self, registry=None, tracer=None):
+        """Attach the observability layer (``repro.obs``): the bus-level
+        metric bridge plus per-engine drift probes into ``registry``
+        (created when None), and — given a ``Tracer`` — the lifecycle
+        trace tracks. Returns the registry. Imported lazily so the plain
+        serving path never loads the obs package."""
+        from repro.obs import MetricsRegistry
+        from repro.obs.probes import instrument as _instrument
+        if registry is None:
+            registry = MetricsRegistry()
+        _instrument(self, registry, tracer)
+        return registry
+
     # ------------------------------------------------------------- wiring
     def _handle_for(self, req: Request) -> Optional[RequestHandle]:
         return self.handles.get(req.rid)

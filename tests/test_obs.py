@@ -1,0 +1,387 @@
+"""Observability layer: histogram/percentile math, Prometheus and JSON
+exposition round-trips, EventBus fault isolation, lifecycle tracing with
+zero-cost parity against an uninstrumented run, estimator-drift probes,
+and live-vs-post-hoc metric parity on engine and cluster backends."""
+import json
+import logging
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterSimulator
+from repro.core import ECHO, ECHO_C, SLO, EchoEngine, TimeModel
+from repro.core.calibration import OnlineCalibrator
+from repro.core.simulator import clone_requests
+from repro.data import make_offline_corpus, make_online_requests
+from repro.obs import (LATENCY_BUCKETS, Histogram, MetricsRegistry, Tracer,
+                       instrument, instrument_engine, parse_prometheus)
+from repro.obs.check import check_prometheus, check_trace
+from repro.serving import EchoService
+
+
+def _tm(**kw):
+    return TimeModel.a100(**kw)
+
+
+def _engine(policy=ECHO_C, num_blocks=48, host_kv_blocks=64, **kw):
+    """Small device cache + host tier: online bursts evict the offline
+    working set, so a short drive exercises preempt AND swap paths."""
+    return EchoEngine(None, None, policy, num_blocks=num_blocks,
+                     block_size=16, chunk_size=32, time_model=_tm(),
+                     host_kv_blocks=host_kv_blocks, **kw)
+
+
+def _pressure_workload(seed=0, duration=4.0, rate=6.0):
+    rng = np.random.default_rng(seed)
+    arrivals = list(np.cumsum(rng.exponential(1.0 / rate, int(rate * duration))))
+    online = make_online_requests(arrivals, prompt_mean=96, prompt_std=24,
+                                  max_new_mean=8, slo=SLO(1.0, 0.1),
+                                  seed=seed + 1)
+    offline = make_offline_corpus(4, 8, doc_len=192, question_len=16,
+                                  max_new=4, seed=seed + 2)
+    return online + offline
+
+
+# ------------------------------------------------------------------ metrics
+def test_histogram_percentile_interpolation():
+    h = Histogram("lat", "", buckets=(0.1, 0.2, 0.4))
+    assert h.percentile(0.5) is None, "empty histogram has no quantiles"
+    for v in (0.05, 0.15, 0.15, 0.3):
+        h.observe(v)
+    # p50 target = 2nd sample -> exactly fills the (0.1, 0.2] bucket's
+    # first of two counts: 0.1 + 0.5 * (0.2 - 0.1)
+    assert h.percentile(0.5) == pytest.approx(0.15)
+    assert h.percentile(0.25) == pytest.approx(0.1)    # edge of bucket 0
+    assert h.percentile(1.0) == pytest.approx(0.4)
+    child = h.labels()
+    assert child.count == 4
+    assert child.sum == pytest.approx(0.65)
+
+
+def test_histogram_overflow_bucket_reports_top_bound():
+    h = Histogram("lat", "", buckets=(1.0, 2.0))
+    h.observe(50.0)
+    # the +Inf bucket has no upper edge: report its lower bound rather
+    # than inventing a value
+    assert h.percentile(0.99) == pytest.approx(2.0)
+    assert h.labels().counts == [0, 0, 1]
+
+
+def test_percentiles_are_monotone_across_quantiles():
+    h = Histogram("lat", "", buckets=LATENCY_BUCKETS)
+    rng = np.random.default_rng(0)
+    for v in rng.exponential(0.3, 500):
+        h.observe(float(v))
+    p50, p90, p99 = (h.percentile(q) for q in (0.5, 0.9, 0.99))
+    assert p50 <= p90 <= p99
+
+
+def test_registry_prometheus_round_trip():
+    r = MetricsRegistry()
+    c = r.counter("tokens_total", "tokens", ("task",))
+    c.labels("online").inc(5)
+    c.labels("offline").inc(2)
+    r.gauge("depth", "queue depth").set(3.5)
+    h = r.histogram("lat_seconds", "latency", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    text = r.to_prometheus()
+    series = parse_prometheus(text)
+    assert ('{task="online"}', 5.0) in series["echo_tokens_total"]
+    assert ('{task="offline"}', 2.0) in series["echo_tokens_total"]
+    assert series["echo_depth"] == [("", 3.5)]
+    # histogram buckets are cumulative and end at +Inf == _count
+    buckets = dict(series["echo_lat_seconds_bucket"])
+    assert buckets['{le="0.1"}'] == 1
+    assert buckets['{le="1"}'] == 2
+    assert buckets['{le="+Inf"}'] == 3
+    assert series["echo_lat_seconds_count"] == [("", 3.0)]
+    assert series["echo_lat_seconds_sum"] == [("", pytest.approx(5.55))]
+
+
+def test_registry_json_snapshot_round_trips():
+    r = MetricsRegistry()
+    r.counter("n_total", "n").inc(7)
+    h = r.histogram("lat", "l", ("replica",), buckets=(0.5,))
+    h.labels("0").observe(0.2)
+    snap = json.loads(json.dumps(r.to_json()))
+    assert snap["echo_n_total"]["series"][0]["value"] == 7
+    hist = snap["echo_lat"]["series"][0]
+    assert hist["labels"] == ["0"]
+    assert hist["counts"] == [1, 0]
+    assert hist["count"] == 1
+
+
+def test_registry_rejects_shape_change_and_reuses_same_shape():
+    r = MetricsRegistry()
+    c1 = r.counter("x_total", "x", ("task",))
+    assert r.counter("x_total", "x", ("task",)) is c1
+    with pytest.raises(ValueError):
+        r.counter("x_total", "x", ("replica",))
+    with pytest.raises(ValueError):
+        r.gauge("x_total", "x", ("task",))
+
+
+def test_parse_prometheus_rejects_malformed_lines():
+    with pytest.raises(ValueError, match="not a valid sample"):
+        parse_prometheus("ok_metric 1\nbad metric line here\n")
+    with pytest.raises(ValueError, match="no samples"):
+        parse_prometheus("# HELP only comments\n")
+
+
+# ----------------------------------------------------------- fault isolation
+def test_event_bus_isolates_poisoned_subscriber(caplog):
+    """A raising callback must not take the serving loop down, must be
+    counted, and must not starve later subscribers of the same event."""
+    service = EchoService(_engine())
+    seen = []
+
+    def poisoned(handle):
+        raise RuntimeError("subscriber bug")
+
+    service.events.on_finish(poisoned)
+    service.events.on_finish(lambda h: seen.append(h.rid))
+    workload = _pressure_workload(seed=1, duration=2.0, rate=3.0)
+    with caplog.at_level(logging.WARNING, logger="repro.serving.events"):
+        stats = service.drive(clone_requests(workload), max_iters=20_000)
+    assert len(stats.finished) == len(workload), \
+        "a poisoned subscriber must not break serving"
+    assert sorted(seen) == sorted(r.rid for r in stats.finished), \
+        "subscribers after the poisoned one must still fire"
+    assert service.events.dropped_callbacks == len(stats.finished)
+    # logged once per (event, callback) pair, not once per event
+    warns = [r for r in caplog.records if "subscriber" in r.message]
+    assert len(warns) == 1
+
+
+# ----------------------------------------------------------------- tracing
+def test_tracer_lifecycle_coverage_and_zero_cost(tmp_path):
+    """The instrumented run must (a) leave the simulation untouched — byte
+    for byte the same stats as a bare run — and (b) produce a loadable
+    Chrome trace covering preempt and swap lifecycles."""
+    workload = _pressure_workload()
+
+    bare = EchoService(_engine())
+    want = bare.drive(clone_requests(workload, preserve_rid=True),
+                      max_iters=20_000)
+
+    service = EchoService(_engine())
+    registry, tracer = MetricsRegistry(), Tracer()
+    instrument(service, registry, tracer)
+    got = service.drive(clone_requests(workload, preserve_rid=True),
+                        max_iters=20_000)
+
+    # zero-cost: tracing must be a pure observer of the virtual clock
+    assert len(got.finished) == len(want.finished)
+    assert got.offline_throughput() == want.offline_throughput()
+    assert got.slo_attainment("ttft") == want.slo_attainment("ttft")
+    assert got.swap_transfer_time == want.swap_transfer_time
+
+    assert tracer.preempted_rids(), "workload must exercise preemption"
+    assert tracer.swapped_rids(), "workload must exercise host-tier swap-in"
+    assert tracer.dropped_events == 0
+
+    path = tmp_path / "trace.json"
+    tracer.write(str(path))
+    summary = check_trace(str(path))
+    assert summary["spans"] > 0 and summary["instants"] > 0
+    with open(path) as f:
+        events = json.load(f)["traceEvents"]
+    names = {e["name"] for e in events}
+    for expected in ("schedule", "exec", "queued", "preempt", "parked",
+                     "swap-in", "finish", "process_name", "thread_name"):
+        assert expected in names, f"missing {expected!r} events"
+
+
+def test_tracer_ring_buffer_bounds_memory():
+    workload = _pressure_workload(seed=2, duration=2.0)
+    service = EchoService(_engine())
+    tracer = Tracer(cap=100)
+    instrument(service, MetricsRegistry(), tracer)
+    service.drive(clone_requests(workload), max_iters=20_000)
+    assert len(tracer._events) == 100
+    assert tracer.dropped_events == tracer.n_recorded - 100 > 0
+    # export still yields a valid trace (oldest events dropped, not corrupt)
+    d = tracer.to_dict()
+    assert d["otherData"]["dropped"] == tracer.dropped_events
+    assert sum(1 for e in d["traceEvents"] if e["ph"] == "X") > 0
+
+
+def test_engine_skips_detail_without_detailed_listener(monkeypatch):
+    """The hot path must not build IterationDetail when no listener
+    overrides on_iteration — the zero-cost-when-disabled contract."""
+    import repro.core.engine as engine_mod
+    from repro.core.engine import EngineListener
+
+    class Passive(EngineListener):
+        pass                                   # does NOT override on_iteration
+
+    class Boom:
+        def __init__(self, *a, **kw):
+            raise AssertionError("IterationDetail built on the bare path")
+
+    eng = _engine()
+    eng.listeners.append(Passive())
+    for r in clone_requests(_pressure_workload(seed=3, duration=1.0)):
+        eng.submit(r)
+    monkeypatch.setattr(engine_mod, "IterationDetail", Boom)
+    eng.run(max_iters=2_000)                   # must never construct Boom
+
+    class Detailed(EngineListener):
+        def __init__(self):
+            self.details = []
+
+        def on_iteration(self, rec, detail):
+            self.details.append(detail)
+
+    monkeypatch.undo()
+    eng2 = _engine()
+    detailed = Detailed()
+    eng2.listeners.append(detailed)
+    for r in clone_requests(_pressure_workload(seed=3, duration=1.0)):
+        eng2.submit(r)
+    eng2.run(max_iters=2_000)
+    assert detailed.details, "overriding listener must receive details"
+    d = detailed.details[0]
+    assert d.t_end >= d.t_start
+
+
+# ------------------------------------------------------------------- probes
+def test_calibrator_residual_tap_fires_for_both_kinds():
+    cal = OnlineCalibrator(_tm())
+    taps = []
+    cal.on_residual = lambda kind, rel: taps.append((kind, rel))
+    rel = cal.observe(0.0, [(0, 64)], [8], observed=0.02)
+    srel = cal.observe_swap(256, observed=0.004)
+    assert ("iter", rel) in taps
+    assert ("swap", srel) in taps
+
+
+def test_engine_probe_populates_drift_metrics(tmp_path):
+    eng = _engine(policy=ECHO_C)
+    for r in clone_requests(_pressure_workload()):
+        eng.submit(r)
+    registry = MetricsRegistry()
+    instrument_engine(eng, registry, replica=0)
+    stats = eng.run(max_iters=20_000)
+
+    assert registry.get("iteration_seconds").labels("0").count == \
+        len(stats.iterations)
+    plan = registry.get("plan_rel_err").labels("0")
+    assert 0 < plan.count <= len(stats.iterations)
+    # ECHO_C calibrates: the chained tap must histogram every residual
+    est = registry.get("estimator_rel_err")
+    assert est.labels("0", "iter").count == eng.calibrator.n_observed > 0
+    assert est.labels("0", "swap").count == eng.calibrator.n_swap_observed > 0
+    # MemoryPredictor-vs-actual probe and pool gauges track the last state
+    snap = eng.bm.occupancy_snapshot()
+    kv = registry.get("kv_blocks")
+    for state in ("free", "running", "cached"):
+        assert kv.labels("0", state).value == snap[state]
+    assert kv.labels("0", "host_capacity").value == snap["host_capacity"]
+    assert registry.get("mem_pred_rel_err").labels("0").count > 0
+    assert registry.get("swap_hidden_frac").labels("0").count > 0
+
+    # the full snapshot survives both expositions
+    prom = tmp_path / "m.prom"
+    registry.write(str(prom))
+    assert check_prometheus(str(prom))["samples"] > 0
+
+
+def test_probe_chains_existing_residual_tap():
+    eng = _engine(policy=ECHO_C)
+    prior = []
+    eng.calibrator.on_residual = lambda kind, rel: prior.append(kind)
+    registry = MetricsRegistry()
+    instrument_engine(eng, registry)
+    for r in clone_requests(_pressure_workload(seed=5, duration=1.5)):
+        eng.submit(r)
+    eng.run(max_iters=10_000)
+    assert len(prior) == eng.calibrator.n_observed \
+        + eng.calibrator.n_swap_observed, \
+        "pre-installed tap must keep firing after the probe chains onto it"
+
+
+# ------------------------------------------------------- live-vs-post-hoc
+def test_live_metrics_swap_accounting_matches_post_hoc_engine():
+    service = EchoService(_engine())
+    stats = service.drive(clone_requests(_pressure_workload(seed=6)),
+                          max_iters=20_000)
+    live = service.live
+    eng = service.engine
+    assert live.swapped_in_tokens == eng.bm.metrics.swapped_in_tokens > 0
+    assert live.swapped_out_tokens == eng.bm.metrics.swapped_out_tokens
+    assert live.swap_transfer_time == pytest.approx(stats.swap_transfer_time)
+    assert live.swap_hidden_frac() == pytest.approx(stats.swap_hidden_frac())
+    assert live.preemptions == \
+        sum(r.n_preemptions for r in stats.finished) > 0
+    done_off = [r for r in stats.finished if not r.is_online]
+    assert live.completed_offline_tokens == \
+        sum(r.prompt_len + r.n_output for r in done_off)
+
+
+def test_live_metrics_match_post_hoc_on_cluster():
+    workload = _pressure_workload(seed=7, duration=5.0, rate=8.0)
+    sim = ClusterSimulator(3, ECHO, num_blocks=48, time_model=_tm(),
+                           host_kv_blocks=64, seed=0)
+    service = EchoService(sim)
+    registry, tracer = MetricsRegistry(), Tracer()
+    instrument(service, registry, tracer)
+    stats = service.drive(clone_requests(workload), until_time=120.0)
+    live = service.live
+    merged = stats.merged()
+    on_done = sum(1 for r in merged.finished if r.is_online)
+    assert live.finished_online == on_done
+    assert live.finished_offline == len(merged.finished) - on_done
+    assert live.slo_attainment("ttft") == stats.slo_attainment("ttft")
+    assert live.slo_attainment("tpot") == stats.slo_attainment("tpot")
+    swapped_in = sum(e.bm.metrics.swapped_in_tokens
+                     for e in service.backend.engines())
+    assert live.swapped_in_tokens == swapped_in
+    # per-replica probe tracks exist and the iteration counts line up
+    it = registry.get("iteration_seconds")
+    for i, eng in enumerate(service.backend.engines()):
+        assert it.labels(str(i)).count == len(eng.stats.iterations)
+    # the router instants land on their own trace process
+    d = tracer.to_dict()
+    router_events = [e for e in d["traceEvents"]
+                     if e["pid"] == 9999 and e["ph"] == "i"]
+    assert router_events, "cluster trace must include dispatch instants"
+
+
+def test_live_percentiles_are_ordered_and_complete():
+    service = EchoService(_engine())
+    service.drive(clone_requests(_pressure_workload(seed=8)),
+                  max_iters=20_000)
+    pct = service.live.percentiles()
+    for name in ("ttft", "tpot", "queue_delay"):
+        assert name in pct, f"{name} missing from percentile table"
+        v = pct[name]
+        assert v["p50"] <= v["p90"] <= v["p99"]
+    assert service.live.percentile("ttft", 0.5) == pct["ttft"]["p50"]
+
+
+# -------------------------------------------------------------- check tool
+def test_check_trace_rejects_invalid_artifacts(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"events": []}))
+    with pytest.raises(ValueError, match="traceEvents"):
+        check_trace(str(bad))
+    nospan = tmp_path / "nospan.json"
+    nospan.write_text(json.dumps(
+        {"traceEvents": [{"ph": "i", "name": "x", "pid": 0, "tid": 1,
+                          "ts": 0.0}]}))
+    with pytest.raises(ValueError, match="no complete"):
+        check_trace(str(nospan))
+    missing = tmp_path / "missing.json"
+    missing.write_text(json.dumps(
+        {"traceEvents": [{"ph": "X", "name": "x", "pid": 0, "tid": 1}]}))
+    with pytest.raises(ValueError, match="missing ts"):
+        check_trace(str(missing))
+
+
+def test_check_prometheus_rejects_garbage(tmp_path):
+    bad = tmp_path / "bad.prom"
+    bad.write_text("this is { not exposition\n")
+    with pytest.raises(ValueError):
+        check_prometheus(str(bad))
