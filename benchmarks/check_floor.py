@@ -25,7 +25,7 @@ import sys
 
 TPUT_KEY = "offline_throughput"
 SLO_KEYS = ("slo_ttft", "slo_tpot")
-BOOL_GATES = ("swap_wins", "overlap_wins")
+BOOL_GATES = ("swap_wins", "overlap_wins", "state_swap_wins")
 
 
 def check(current: dict, baseline: dict, tolerance: float,

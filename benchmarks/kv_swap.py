@@ -9,12 +9,18 @@ tier, evicted blocks with future reuse are parked in host memory and
 restored over PCIe when the scheduler prices the transfer under the
 recompute (Eq.6 vs. the TimeModel's swap terms).
 
-Three modes:
+Three paged modes:
   recompute    — no host tier (every punished eviction recomputes)
   swap_serial  — host tier, PCIe charged serially per iteration (PR 4)
   swap         — host tier, transfers overlapped with compute: the clock
                  charges max(compute, transfer) + launch, and the scheduler
                  only prices the *exposed* transfer tail against the SLO
+
+State-family column (``--arch mamba2``, also part of the default run): the
+same scenario priced over fixed-size recurrent-state snapshots instead of
+per-token KV pages (restore_last_only — a restore moves ONE snapshot no
+matter how deep the prefix). Two modes, state_recompute / state_swap,
+headline ``state_swap_wins`` mirrors gate 1.
 
 Reported per mode: offline throughput, SLO attainment, swap traffic,
 punished (future-needed, recompute-bound) tokens, and the overlap
@@ -44,6 +50,18 @@ SMOKE = dict(duration=8.0, n_docs=3, questions=12, num_blocks=64,
 MODES = (("recompute", 0, True),
          ("swap_serial", HOST_BLOCKS, False),
          ("swap", HOST_BLOCKS, True))
+# same burst scenario, priced over recurrent-state snapshots (virtual clock:
+# no runner is built, only the BlockIOSpec byte pricing differs)
+STATE_ARCH = "mamba2-1.3b"
+STATE_MODES = (("state_recompute", 0, True),
+               ("state_swap", HOST_BLOCKS, True))
+
+
+def _state_io():
+    from repro.configs import get_config
+    from repro.core.block_io import io_spec_for_model
+    from repro.models import Model
+    return io_spec_for_model(Model(get_config(STATE_ARCH).reduced()))
 
 
 def _run(host_blocks: int, swap_overlap: bool, overrides=None,
@@ -98,32 +116,52 @@ def obs_overhead(overrides=None, max_iters: int = 60_000,
             "bare_wall": min(bare), "instrumented_wall": min(instr)}
 
 
-def results(smoke: bool = False, trace_out=None, metrics_out=None):
+def _mode_report(eng, stats, host, overlap):
+    m = eng.bm.metrics
+    return {
+        "host_blocks": host,
+        "swap_overlap": overlap,
+        "io_family": eng.bm.io.family,
+        "offline_throughput": stats.offline_throughput(),
+        "slo_ttft": stats.slo_attainment("ttft"),
+        "slo_tpot": stats.slo_attainment("tpot"),
+        "online_finished": sum(1 for r in stats.finished if r.is_online),
+        "offline_finished": sum(1 for r in stats.finished
+                                if not r.is_online),
+        "evictions": m.evictions,
+        "punished_tokens": m.punished_tokens,
+        "swapped_out_tokens": m.swapped_out_tokens,
+        "swapped_in_tokens": m.swapped_in_tokens,
+        "swapped_out_bytes": m.swapped_out_bytes,
+        "swapped_in_bytes": m.swapped_in_bytes,
+        "host_bounced_blocks": m.host_bounced_blocks,
+        "swap_transfer_time": stats.swap_transfer_time,
+        "swap_exposed_time": stats.swap_exposed_time,
+        "swap_hidden_frac": stats.swap_hidden_frac(),
+    }
+
+
+def results(smoke: bool = False, trace_out=None, metrics_out=None,
+            arch: str = "all"):
     overrides = dict(SMOKE) if smoke else {}
     max_iters = overrides.pop("max_iters", 60_000)
     out = {}
-    for mode, host, overlap in MODES:
-        eng, stats, online, offline = _run(host, overlap, overrides,
-                                           max_iters)
-        m = eng.bm.metrics
-        out[mode] = {
-            "host_blocks": host,
-            "swap_overlap": overlap,
-            "offline_throughput": stats.offline_throughput(),
-            "slo_ttft": stats.slo_attainment("ttft"),
-            "slo_tpot": stats.slo_attainment("tpot"),
-            "online_finished": sum(1 for r in stats.finished if r.is_online),
-            "offline_finished": sum(1 for r in stats.finished
-                                    if not r.is_online),
-            "evictions": m.evictions,
-            "punished_tokens": m.punished_tokens,
-            "swapped_out_tokens": m.swapped_out_tokens,
-            "swapped_in_tokens": m.swapped_in_tokens,
-            "host_bounced_blocks": m.host_bounced_blocks,
-            "swap_transfer_time": stats.swap_transfer_time,
-            "swap_exposed_time": stats.swap_exposed_time,
-            "swap_hidden_frac": stats.swap_hidden_frac(),
-        }
+    if arch in ("all", "paged"):
+        for mode, host, overlap in MODES:
+            eng, stats, online, offline = _run(host, overlap, overrides,
+                                               max_iters)
+            out[mode] = _mode_report(eng, stats, host, overlap)
+    if arch in ("all", "mamba2"):
+        state_ov = dict(overrides)
+        state_ov["io_spec"] = _state_io()
+        for mode, host, overlap in STATE_MODES:
+            eng, stats, online, offline = _run(host, overlap, state_ov,
+                                               max_iters)
+            out[mode] = _mode_report(eng, stats, host, overlap)
+    if arch == "mamba2":
+        srec, ssw = out["state_recompute"], out["state_swap"]
+        out["headline"] = _state_headline(srec, ssw)
+        return out
     rec, ser, sw = out["recompute"], out["swap_serial"], out["swap"]
     out["headline"] = {
         "tput_ratio": sw["offline_throughput"]
@@ -150,6 +188,9 @@ def results(smoke: bool = False, trace_out=None, metrics_out=None):
             and sw["slo_ttft"] >= ser["slo_ttft"] - 1e-9
             and sw["slo_tpot"] >= ser["slo_tpot"] - 1e-9),
     }
+    if arch == "all":
+        out["headline"].update(_state_headline(out["state_recompute"],
+                                               out["state_swap"]))
     # acceptance gate 3 (ISSUE 6): observability must stay cheap — re-run
     # the swap mode with tracer + probes attached and compare wall clocks
     out["headline"].update(obs_overhead(
@@ -158,10 +199,25 @@ def results(smoke: bool = False, trace_out=None, metrics_out=None):
     return out
 
 
+def _state_headline(srec, ssw):
+    """Acceptance gate (this PR): snapshot restore must not lose to
+    recompute-only at equal-or-better SLO attainment."""
+    return {
+        "state_tput_ratio": ssw["offline_throughput"]
+        / max(srec["offline_throughput"], 1e-9),
+        "state_slo_delta_ttft": ssw["slo_ttft"] - srec["slo_ttft"],
+        "state_slo_delta_tpot": ssw["slo_tpot"] - srec["slo_tpot"],
+        "state_swap_wins": bool(
+            ssw["offline_throughput"] >= srec["offline_throughput"]
+            and ssw["slo_ttft"] >= srec["slo_ttft"] - 1e-9
+            and ssw["slo_tpot"] >= srec["slo_tpot"] - 1e-9),
+    }
+
+
 def rows():
     res = results()
     out = []
-    for mode, _, _ in MODES:
+    for mode, _, _ in (*MODES, *STATE_MODES):
         r = res[mode]
         out.append((f"kv_swap.{mode}.offline_tput", 0.0,
                     f"{r['offline_throughput']:.1f}"))
@@ -177,6 +233,9 @@ def rows():
     out.append(("kv_swap.overlap_hidden_frac", 0.0,
                 f"{h['overlap_hidden_frac']:.3f}"))
     out.append(("kv_swap.overlap_wins", 0.0, str(h["overlap_wins"])))
+    out.append(("kv_swap.state_tput_ratio", 0.0,
+                f"{h['state_tput_ratio']:.3f}"))
+    out.append(("kv_swap.state_swap_wins", 0.0, str(h["state_swap_wins"])))
     out.append(("kv_swap.obs_overhead", 0.0, f"{h['obs_overhead']:.3f}"))
     return out
 
@@ -196,27 +255,39 @@ def main():
     ap.add_argument("--metrics-out", default=None,
                     help="write the instrumented run's metrics snapshot "
                          "here (CI artifact)")
+    ap.add_argument("--arch", default="all",
+                    choices=("all", "paged", "mamba2"),
+                    help="block I/O family: paged KV, mamba2 state "
+                         "snapshots, or both (default)")
     args = ap.parse_args()
     res = results(smoke=args.smoke, trace_out=args.trace_out,
-                  metrics_out=args.metrics_out)
-    for mode, _, _ in MODES:
-        r = res[mode]
-        print(f"{mode:>11}: tput {r['offline_throughput']:8.1f} tok/s  "
+                  metrics_out=args.metrics_out, arch=args.arch)
+    for mode, _, _ in (*MODES, *STATE_MODES):
+        r = res.get(mode)
+        if r is None:
+            continue
+        print(f"{mode:>15}: tput {r['offline_throughput']:8.1f} tok/s  "
               f"ttft {r['slo_ttft']:.3f}  tpot {r['slo_tpot']:.3f}  "
               f"punished {r['punished_tokens']:6d}  "
               f"swap in/out {r['swapped_in_tokens']}/"
               f"{r['swapped_out_tokens']}  "
               f"hidden {r['swap_hidden_frac']:.0%}")
     h = res["headline"]
-    print(f"headline: swap x{h['tput_ratio']:.2f} vs recompute "
-          f"(dTTFT {h['slo_delta_ttft']:+.3f} dTPOT "
-          f"{h['slo_delta_tpot']:+.3f})  swap_wins={h['swap_wins']}")
-    print(f"          overlap x{h['overlap_tput_ratio']:.2f} vs serial "
-          f"(hidden {h['overlap_hidden_frac']:.0%})  "
-          f"overlap_wins={h['overlap_wins']}")
-    print(f"          obs overhead x{h['obs_overhead']:.3f} "
-          f"({h['bare_wall']:.2f}s bare, "
-          f"{h['instrumented_wall']:.2f}s instrumented)")
+    if "tput_ratio" in h:
+        print(f"headline: swap x{h['tput_ratio']:.2f} vs recompute "
+              f"(dTTFT {h['slo_delta_ttft']:+.3f} dTPOT "
+              f"{h['slo_delta_tpot']:+.3f})  swap_wins={h['swap_wins']}")
+        print(f"          overlap x{h['overlap_tput_ratio']:.2f} vs serial "
+              f"(hidden {h['overlap_hidden_frac']:.0%})  "
+              f"overlap_wins={h['overlap_wins']}")
+    if "state_tput_ratio" in h:
+        print(f"          state swap x{h['state_tput_ratio']:.2f} vs "
+              f"recompute (dTTFT {h['state_slo_delta_ttft']:+.3f})  "
+              f"state_swap_wins={h['state_swap_wins']}")
+    if "obs_overhead" in h:
+        print(f"          obs overhead x{h['obs_overhead']:.3f} "
+              f"({h['bare_wall']:.2f}s bare, "
+              f"{h['instrumented_wall']:.2f}s instrumented)")
     if args.trace_out:
         print(f"wrote {args.trace_out}")
     if args.metrics_out:
@@ -226,12 +297,16 @@ def main():
             json.dump(res, f, indent=2)
         print(f"wrote {args.json}")
     if not args.smoke:
-        if not h["swap_wins"]:
+        if not h.get("swap_wins", True):
             raise SystemExit("swap-enabled Echo did not beat recompute-only "
                              "at equal-or-better SLO attainment")
-        if not h["overlap_wins"]:
+        if not h.get("overlap_wins", True):
             raise SystemExit("overlapped swap did not beat serial swap at "
                              "equal-or-better SLO attainment")
+        if not h.get("state_swap_wins", True):
+            raise SystemExit("state-snapshot swap did not beat "
+                             "recompute-only at equal-or-better SLO "
+                             "attainment")
 
 
 if __name__ == "__main__":

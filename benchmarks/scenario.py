@@ -18,6 +18,7 @@ DEFAULTS = dict(
     online_rate=1.5, burst_rate=8.0, burst_len=8.0, burst_prob=0.05,
     online_prompt=160, online_new=24, slo=SLO(1.0, 0.1),
     n_docs=10, questions=96, doc_len=320, question_len=32, offline_new=16,
+    io_spec=None,                     # block I/O family (None = paged KV)
 )
 
 
@@ -53,7 +54,8 @@ def _make_engine(policy, tm, p, clock_model):
                       block_size=p["block_size"], chunk_size=p["chunk_size"],
                       time_model=tm, clock_model=clock_model,
                       max_running=p["max_running"],
-                      host_kv_blocks=p["host_kv_blocks"])
+                      host_kv_blocks=p["host_kv_blocks"],
+                      io_spec=p["io_spec"])
 
 
 def build_service(policy: PolicyConfig, seed: int = 0, tm_kw=None,

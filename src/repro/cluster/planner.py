@@ -14,6 +14,7 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
 from repro.cluster.simulator import ClusterSimulator, ClusterStats
+from repro.core.block_io import BlockIOSpec, paged_spec
 from repro.core.estimator import TimeModel
 from repro.core.policies import ECHO, PolicyConfig
 from repro.core.request import Request
@@ -32,6 +33,7 @@ class FleetReport:
         field(default_factory=list)
     offline_throughput: Optional[float] = None
     host_blocks_per_replica: int = 0      # §5.4 extended: host-tier sizing
+    host_bytes_per_replica: int = 0       # the same tier in link/RAM bytes
 
 
 class FleetPlanner:
@@ -40,12 +42,16 @@ class FleetPlanner:
                  router_policy: str = "affinity",
                  clock_models: Optional[Sequence] = None,
                  block_size: int = 16, chunk_size: int = 64,
-                 max_running: int = 64, seed: int = 0):
+                 max_running: int = 64, seed: int = 0,
+                 io_spec: Optional[BlockIOSpec] = None):
         """``clock_models``: per-replica ground-truth hardware profiles
         (cycled across the fleet) — plan over a *mixed-hardware* fleet, e.g.
         ``[TimeModel.a100(), TimeModel.h100()]``, while every replica's
         scheduler starts from the same ``time_model`` estimate (pair with a
-        calibrating policy so each replica learns its own hardware)."""
+        calibrating policy so each replica learns its own hardware).
+        ``io_spec`` sets the fleet's block I/O family; host-tier budgets are
+        priced through it (a host gigabyte holds far more state snapshots
+        than paged KV pages)."""
         self.tm = time_model
         self.policy = policy
         self.router_policy = router_policy
@@ -54,6 +60,14 @@ class FleetPlanner:
         self.chunk_size = chunk_size
         self.max_running = max_running
         self.seed = seed
+        self.io = io_spec or paged_spec()
+
+    def host_blocks_for_bytes(self, n_bytes: float) -> int:
+        """Host-tier slots a byte budget buys under this fleet's family:
+        one slot parks one block's payload — ``io.block_bytes(block_size)``
+        bytes of KV pages, or one fixed-size snapshot."""
+        slot = max(self.io.block_bytes(self.block_size), 1)
+        return int(n_bytes // slot)
 
     # ------------------------------------------------------------- probes
     def simulate(self, online: Sequence[Request], offline: Sequence[Request],
@@ -69,7 +83,8 @@ class FleetPlanner:
                                max_running=self.max_running, seed=self.seed,
                                time_model=self.tm,
                                clock_models=self.clock_models,
-                               host_kv_blocks=host_blocks)
+                               host_kv_blocks=host_blocks,
+                               io_spec=self.io)
         sim.submit_all(clone_requests(online) + clone_requests(offline))
         return sim.run(max_iters=max_iters, until_time=duration)
 
@@ -96,6 +111,7 @@ class FleetPlanner:
              candidate_replicas: Sequence[int] = (1, 2, 4),
              candidate_blocks: Sequence[int] = (64, 128, 256),
              candidate_host_blocks: Sequence[int] = (0,),
+             candidate_host_bytes: Optional[Sequence[float]] = None,
              slo_target: float = 0.9,
              offline_target: Optional[float] = None,
              duration: Optional[float] = None) -> FleetReport:
@@ -107,7 +123,15 @@ class FleetPlanner:
         tier (replicas x device blocks x host blocks): host memory is far
         cheaper than HBM, so the planner prefers the smallest host tier that
         lifts a device-feasible config over the offline target before
-        growing device blocks or the fleet."""
+        growing device blocks or the fleet.
+
+        ``candidate_host_bytes`` states the same budgets in RAM bytes and
+        overrides ``candidate_host_blocks``: each budget is converted to
+        slots through the fleet's I/O family, so the identical byte ladder
+        yields many more slots on a state-snapshot fleet than a paged one."""
+        if candidate_host_bytes is not None:
+            candidate_host_blocks = [self.host_blocks_for_bytes(b)
+                                     for b in candidate_host_bytes]
         report = FleetReport(None, None)
         for n in sorted(candidate_replicas):
             for nb in sorted(candidate_blocks):
@@ -128,6 +152,8 @@ class FleetPlanner:
                     report.min_replicas = n
                     report.blocks_per_replica = nb
                     report.host_blocks_per_replica = hb
+                    report.host_bytes_per_replica = \
+                        hb * self.io.block_bytes(self.block_size)
                     report.offline_throughput = tput
                     return report
         return report

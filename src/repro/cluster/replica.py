@@ -13,6 +13,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.core.block_io import BlockIOSpec
 from repro.core.block_manager import chain_hash, prefix_chain
 from repro.core.engine import EchoEngine
 from repro.core.estimator import TimeModel
@@ -55,18 +56,21 @@ class Replica:
                   chunk_size: int = 64, time_model: Optional[TimeModel] = None,
                   clock_model=None,
                   max_batch_tokens: int = 2048, max_running: int = 64,
-                  host_kv_blocks: int = 0, seed: int = 0) -> "Replica":
+                  host_kv_blocks: int = 0, seed: int = 0,
+                  io_spec: Optional[BlockIOSpec] = None) -> "Replica":
         """``time_model`` is this replica's *estimate* (what its scheduler
         believes); ``clock_model`` its ground-truth hardware profile — pass
         different ones per replica for a heterogeneous/miscalibrated fleet.
-        ``host_kv_blocks`` sizes this replica's host KV swap tier."""
+        ``host_kv_blocks`` sizes this replica's host KV swap tier and
+        ``io_spec`` sets its block I/O family (paged KV pages vs. fixed-size
+        state snapshots) — transfers are priced by the family's bytes."""
         eng = EchoEngine(None, None, policy, num_blocks=num_blocks,
                          block_size=block_size, chunk_size=chunk_size,
                          time_model=time_model, clock_model=clock_model,
                          clock="virtual",
                          seed=seed, max_batch_tokens=max_batch_tokens,
                          max_running=max_running,
-                         host_kv_blocks=host_kv_blocks)
+                         host_kv_blocks=host_kv_blocks, io_spec=io_spec)
         return cls(replica_id, eng)
 
     # ------------------------------------------------------------- intake
@@ -107,6 +111,20 @@ class Replica:
         if chain is None:
             chain = prefix_chain(req.full_tokens, bm.block_size)
         return bm.host_chain_blocks(chain, bm.device_chain_blocks(chain))
+
+    def host_prefix_bytes(self, req: Request,
+                          chain: Optional[List[int]] = None) -> int:
+        """Link bytes to restore ``req``'s host-parked prefix, priced by
+        this replica's block I/O family: a paged replica uploads every
+        token's KV pages, a state-family replica uploads one fixed-size
+        snapshot regardless of prefix depth (restore_last_only). The router
+        uses this as a cost tie-break — equal block counts parked on a
+        paged and a state replica are NOT equal link traffic."""
+        bm = self.engine.bm
+        blocks = self.host_prefix_blocks(req, chain)
+        if blocks <= 0:
+            return 0
+        return bm.io.restore_bytes(blocks * bm.block_size, bm.block_size)
 
     def affinity(self, group_hash: Optional[int],
                  req: Optional[Request] = None,

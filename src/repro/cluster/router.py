@@ -104,8 +104,13 @@ class Router:
         best_aff = max(aff for aff, _ in scored)
         if best_aff > 0:
             self.stats.affinity_hits += 1
+            # family-aware cost tie-break: at equal affinity and backlog,
+            # prefer the replica whose parked prefix is cheapest to restore
+            # (a state-family snapshot is one fixed upload; paged KV pays
+            # per token — equal block counts are not equal link traffic)
             return min((rep for aff, rep in scored if aff == best_aff),
-                       key=lambda r: (r.offline_backlog(), r.id))
+                       key=lambda r: (r.offline_backlog(),
+                                      r.host_prefix_bytes(req, chain), r.id))
         # unseen group: open its home on the least-backlogged replica
         return min(self.replicas,
                    key=lambda r: (r.offline_backlog(), r.id))
@@ -143,7 +148,10 @@ class Router:
                 if best_aff > 0:
                     target = min((o for aff, o in scored if aff == best_aff),
                                  key=lambda o: (o.online_queue_depth(),
-                                                o.offline_backlog(), o.id))
+                                                o.offline_backlog(),
+                                                o.host_prefix_bytes(req,
+                                                                    chain),
+                                                o.id))
                     self.stats.steal_affinity_hits += 1
                 else:
                     target = calmest

@@ -18,6 +18,7 @@ from typing import List, Optional, Sequence, Tuple
 
 from repro.cluster.replica import Replica
 from repro.cluster.router import Router, RouterStats
+from repro.core.block_io import BlockIOSpec
 from repro.core.engine import MAX_STALLS, EngineStats
 from repro.core.estimator import PerturbedTimeModel, TimeModel
 from repro.core.policies import ECHO, PolicyConfig
@@ -79,6 +80,7 @@ class ClusterSimulator:
                  clock_models: Optional[Sequence] = None,
                  max_batch_tokens: int = 2048, max_running: int = 64,
                  host_kv_blocks: int = 0,
+                 io_spec: Optional[BlockIOSpec] = None,
                  seed: int = 0, steal_queue_depth: int = 4,
                  steal_batch: int = 8, rebalance_every: int = 8):
         if n_replicas < 1:
@@ -106,7 +108,8 @@ class ClusterSimulator:
                               clock_model=clock_for(i),
                               max_batch_tokens=max_batch_tokens,
                               max_running=max_running,
-                              host_kv_blocks=host_kv_blocks, seed=seed + i)
+                              host_kv_blocks=host_kv_blocks, seed=seed + i,
+                              io_spec=io_spec)
             for i in range(n_replicas)
         ]
         self.router = Router(self.replicas, policy=router_policy, seed=seed,

@@ -23,6 +23,13 @@ PCIe instead of recomputing it. The manager only does the bookkeeping and
 journals (bid, hash) swap events; the engine stages the actual payloads
 against the runner (``drain_swap_events``) and the scheduler decides
 swap-in vs. recompute per candidate using the TimeModel's transfer terms.
+
+The manager is runner-family agnostic: a ``BlockIOSpec`` prices what a
+block's payload weighs in bytes (paged KV pages scale with tokens; a
+recurrent-state snapshot is one fixed-size pytree per boundary), and for
+``restore_last_only`` families ``swap_in`` uploads only the last boundary's
+snapshot — earlier blocks re-register as ``"in_lazy"`` journal events whose
+payload lands host-side without touching the PCIe link.
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ import itertools
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.block_io import BlockIOSpec, paged_spec
 from repro.core.request import Request, TaskType
 
 ONLINE_PREEMPTED_PRIORITY = 1e9
@@ -78,6 +86,7 @@ class HostBlock:
     unfinished_owners: int = 0
     lat: float = 0.0
     payload: Optional[object] = None
+    n_bytes: int = 0                     # link weight per the family's io spec
 
 
 class HostTier:
@@ -166,8 +175,10 @@ class BlockManagerMetrics:
     punished_tokens: int = 0             # evicted tokens needed in the future
     swapped_out_blocks: int = 0
     swapped_out_tokens: int = 0
+    swapped_out_bytes: int = 0           # PCIe traffic parked to the host
     swapped_in_blocks: int = 0
     swapped_in_tokens: int = 0           # recompute avoided via host tier
+    swapped_in_bytes: int = 0            # PCIe traffic restored (lazy = free)
     host_bounced_blocks: int = 0         # refused by the full host tier
 
     @property
@@ -186,9 +197,11 @@ class BlockManager:
     def __init__(self, num_blocks: int, block_size: int, *,
                  task_aware: bool = True,
                  rc_provider: Optional[Callable[[int], int]] = None,
-                 host_blocks: int = 0):
+                 host_blocks: int = 0,
+                 io: Optional[BlockIOSpec] = None):
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.io = io or paged_spec()
         self.task_aware = task_aware
         self.rc_provider = rc_provider or (lambda h: 0)
         self.blocks: List[Block] = [Block(i) for i in range(num_blocks)]
@@ -347,12 +360,19 @@ class BlockManager:
         ``TimeModel.swap_time`` — KV becomes resident without compute.
         Restored blocks count against the §4.2 running-KV threshold exactly
         like freshly computed ones (swap-in is not a loophole around the
-        burst headroom)."""
+        burst headroom).
+
+        For a ``restore_last_only`` family (recurrent-state snapshots) only
+        the *last* restored boundary's payload must cross the link — the
+        recurrence resumes from it — so every earlier event of this call is
+        re-journaled as ``"in_lazy"``: the engine re-registers its payload
+        with the runner host-side, costing zero transfer time."""
         if self.host is None or max_tokens < self.block_size:
             return 0
         bs = self.block_size
         start = len(req.block_ids) * bs
         prev = self._chain_up_to(req, len(req.block_ids), tokens)
+        first_event = len(self._swap_events)
         restored = 0
         while restored + bs <= max_tokens:
             n = start + restored
@@ -387,6 +407,14 @@ class BlockManager:
             self.metrics.swapped_in_tokens += hb.n_tokens
             prev = h
             restored += bs
+        if restored and self.io.restore_last_only:
+            for i in range(first_event, len(self._swap_events) - 1):
+                kind, bid, hb = self._swap_events[i]
+                if kind == "in":
+                    self._swap_events[i] = ("in_lazy", bid, hb)
+        for kind, _, hb in self._swap_events[first_event:]:
+            if kind == "in":
+                self.metrics.swapped_in_bytes += hb.n_bytes
         return restored
 
     def pending_swap_out_tokens(self) -> int:
@@ -396,12 +424,21 @@ class BlockManager:
         return sum(hb.n_tokens for kind, _, hb in self._swap_events
                    if kind == "out")
 
+    def pending_swap_out_bytes(self) -> int:
+        """``pending_swap_out_tokens`` in link units — what the journaled
+        swap-OUTs will actually put on the PCIe link, per the family's io
+        spec (bytes are priced at eviction time into ``HostBlock.n_bytes``)."""
+        return sum(hb.n_bytes for kind, _, hb in self._swap_events
+                   if kind == "out")
+
     def drain_swap_events(self) -> List[Tuple[str, int, HostBlock]]:
         """Swap decisions since the last drain, in order. The engine must
         process these before the runner writes any pages this iteration —
         an "out" bid's device pages are still intact until then, and an
         "in" whose block was swapped out this same iteration reads the
-        payload staged by its earlier "out" entry (same HostBlock object)."""
+        payload staged by its earlier "out" entry (same HostBlock object).
+        "in_lazy" entries (restore_last_only families) re-register the host
+        payload with the runner without an upload — zero link traffic."""
         out, self._swap_events = self._swap_events, []
         return out
 
@@ -475,12 +512,14 @@ class BlockManager:
                 hb = HostBlock(hash=blk.hash, n_tokens=blk.n_tokens,
                                task_type=blk.task_type,
                                unfinished_owners=blk.unfinished_owners,
-                               lat=blk.lat)
+                               lat=blk.lat,
+                               n_bytes=self.io.block_bytes(blk.n_tokens))
                 swapped = self.host.admit(hb)
                 if swapped:
                     self._swap_events.append(("out", bid, hb))
                     self.metrics.swapped_out_blocks += 1
                     self.metrics.swapped_out_tokens += blk.n_tokens
+                    self.metrics.swapped_out_bytes += hb.n_bytes
                 else:
                     self.metrics.host_bounced_blocks += 1
             if rc > 0 and not swapped:
@@ -610,9 +649,14 @@ class BlockManager:
         prev = 0
         covered = min(len(tokens), req.total_len)
         n_full = covered // bs
-        # track valid tokens in the trailing partial block (for punishment)
+        # track valid tokens in the trailing partial block (for punishment).
+        # The slot can alias a COMMITTED full block (a deeper-prefix peer's
+        # block hash-hit at allocate): its content — and the payload an
+        # eviction would move — is still the full block; don't relabel it.
         if n_full < len(req.block_ids) and covered % bs:
-            self.blocks[req.block_ids[n_full]].n_tokens = covered % bs
+            blk = self.blocks[req.block_ids[n_full]]
+            if blk.hash is None:
+                blk.n_tokens = covered % bs
         for bi in range(n_full):
             chunk = tuple(tokens[bi * bs: (bi + 1) * bs])
             h = chain_hash(prev, chunk)

@@ -62,8 +62,9 @@ class OnlineCalibrator:
         self._decode: Deque[Tuple[int, float, float]] = deque(maxlen=window)
         self._mixed: Deque[Tuple[List[Span], List[int], float]] = \
             deque(maxlen=window)
-        # swap staging observations: (tokens, seconds) for the PCIe terms,
-        # (compute, tokens, total) for the overlap launch overhead
+        # swap staging observations: (bytes, seconds) for the PCIe terms,
+        # (compute, bytes, total) for the overlap launch overhead — byte-
+        # denominated so KV-page and state-snapshot transfers share one pool
         self._swap: Deque[Tuple[int, float]] = deque(maxlen=window)
         self._overlap: Deque[Tuple[float, int, float]] = deque(maxlen=window)
 
@@ -123,22 +124,23 @@ class OnlineCalibrator:
             self.refit()
         return rel
 
-    def observe_swap(self, n_tokens: int, observed: float) -> float:
-        """Record one staging transfer (ROADMAP open item: the swap terms
-        were static after ``fit_swap`` while the compute terms refit). On
-        the wall path ``observed`` is the copy worker's measured staging
-        seconds; on the virtual path the ground-truth clock's transfer leg.
-        Refits the PCIe terms in place on sustained drift. Returns the
-        transfer's relative error under the (pre-refit) estimate."""
-        if n_tokens <= 0:
+    def observe_swap(self, n_bytes: int, observed: float) -> float:
+        """Record one staging transfer of ``n_bytes`` of block payload
+        (ROADMAP open item: the swap terms were static after ``fit_swap``
+        while the compute terms refit). On the wall path ``observed`` is the
+        copy worker's measured staging seconds; on the virtual path the
+        ground-truth clock's transfer leg. Refits the PCIe terms in place on
+        sustained drift. Returns the transfer's relative error under the
+        (pre-refit) estimate."""
+        if n_bytes <= 0:
             return 0.0
-        predicted = self.tm.swap_time(n_tokens)
+        predicted = self.tm.swap_time(n_bytes)
         rel = abs(predicted - observed) / max(observed, 1e-12)
         if self.ewma_swap_err is None:
             self.ewma_swap_err = rel
         else:
             self.ewma_swap_err += self.ewma_alpha * (rel - self.ewma_swap_err)
-        self._swap.append((n_tokens, observed))
+        self._swap.append((n_bytes, observed))
         self.n_swap_observed += 1
         self._since_swap_refit += 1
         if self.on_residual is not None:
@@ -147,13 +149,13 @@ class OnlineCalibrator:
             self.refit_swap()
         return rel
 
-    def observe_overlap(self, compute: float, n_tokens: int,
+    def observe_overlap(self, compute: float, n_bytes: int,
                         total: float) -> None:
-        """Record one overlapped iteration (compute, transfer tokens, total
+        """Record one overlapped iteration (compute, transfer bytes, total
         observed time) — the sample family that refits the async launch
         overhead (``fit_swap_overlap``) alongside the PCIe terms."""
-        if n_tokens > 0:
-            self._overlap.append((compute, n_tokens, total))
+        if n_bytes > 0:
+            self._overlap.append((compute, n_bytes, total))
 
     def drifting(self) -> bool:
         return (self.ewma_err is not None

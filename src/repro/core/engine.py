@@ -27,6 +27,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.block_io import BlockIOSpec, io_spec_for_model, paged_spec
 from repro.core.block_manager import BlockManager
 from repro.core.calibration import OnlineCalibrator
 from repro.core.estimator import MemoryPredictor, TimeModel
@@ -53,8 +54,10 @@ class IterationRecord:
     usage: Dict[str, int] = field(default_factory=dict)
     hit_rate: float = 0.0
     threshold_blocks: int = 0
-    swap_in_tokens: int = 0        # KV restored from the host tier (PCIe)
-    swap_out_tokens: int = 0       # KV parked on the host tier (PCIe)
+    swap_in_tokens: int = 0        # tokens restored from the host tier
+    swap_out_tokens: int = 0       # tokens parked on the host tier
+    swap_in_bytes: int = 0         # PCIe bytes of the restores (lazy = 0)
+    swap_out_bytes: int = 0        # PCIe bytes of the parks
     host_blocks: int = 0           # host-tier occupancy at iteration end
     swap_transfer_time: float = 0.0  # PCIe seconds put on the copy stream
     swap_exposed_time: float = 0.0   # the tail NOT hidden under compute
@@ -133,7 +136,7 @@ class _SwapStager:
         self._inflight: Dict[int, Tuple[str, Future]] = {}
         self.staged_wall = 0.0      # seconds of staging done on the worker
         self.exposed_wall = 0.0     # seconds the engine blocked in fences
-        # (tokens, worker seconds) per transfer, for swap-term calibration;
+        # (bytes, worker seconds) per transfer, for swap-term calibration;
         # bounded so a virtual-clock run that never drains cannot grow it.
         # The lock serializes worker appends against the engine's drain.
         self._samples: List[Tuple[int, float]] = []
@@ -146,6 +149,12 @@ class _SwapStager:
             if kind == "out":
                 snap = self.runner.snapshot_block(bid)
                 fut = self._pool.submit(self._stage_out, hb, snap)
+            elif kind == "in_lazy":
+                # restore_last_only families: the payload re-registers
+                # host-side without an upload — but it must still ride the
+                # worker FIFO so an "out" of the same content earlier this
+                # iteration has produced the payload before we hand it over
+                fut = self._pool.submit(self._stage_lazy, hb)
             else:
                 fut = self._pool.submit(self._stage_in, hb)
             self._inflight[bid] = (kind, fut)
@@ -153,7 +162,7 @@ class _SwapStager:
     def _stage_out(self, hb, snap):
         t0 = time.perf_counter()
         hb.payload = self.runner.materialize(snap)
-        self._account(hb.n_tokens, time.perf_counter() - t0)
+        self._account(hb.n_bytes, time.perf_counter() - t0)
         return None
 
     def _stage_in(self, hb):
@@ -163,14 +172,21 @@ class _SwapStager:
             f"swap-in of block hash {hb.hash} with no staged payload"
         t0 = time.perf_counter()
         staged = self.runner.stage_payload(hb.payload)
-        self._account(hb.n_tokens, time.perf_counter() - t0)
+        self._account(hb.n_bytes, time.perf_counter() - t0)
         return staged
 
-    def _account(self, n_tokens: int, dt: float) -> None:
+    def _stage_lazy(self, hb):
+        # no link traffic and no calibration sample: a lazy restore only
+        # hands the (already host-resident) payload back to the runner
+        assert hb.payload is not None, \
+            f"lazy swap-in of block hash {hb.hash} with no staged payload"
+        return hb.payload
+
+    def _account(self, n_bytes: int, dt: float) -> None:
         with self._samples_lock:
             self.staged_wall += dt
             if len(self._samples) < 2048:
-                self._samples.append((n_tokens, dt))
+                self._samples.append((n_bytes, dt))
 
     def fence(self, bids: Iterable[int]) -> None:
         """Complete every in-flight transfer touching ``bids``: block on
@@ -184,6 +200,8 @@ class _SwapStager:
             staged = fut.result()
             if kind == "in":
                 self.runner.write_block(bid, staged)
+            elif kind == "in_lazy":
+                self.runner.write_block_lazy(bid, staged)
             self.exposed_wall += time.perf_counter() - t0
 
     def flush(self) -> None:
@@ -226,13 +244,23 @@ class EngineStats:
 
     @property
     def swapped_in_tokens(self) -> int:
-        """Total KV restored host->device instead of recomputed."""
+        """Total tokens restored host->device instead of recomputed."""
         return sum(r.swap_in_tokens for r in self.iterations)
 
     @property
     def swapped_out_tokens(self) -> int:
-        """Total KV parked device->host instead of dropped."""
+        """Total tokens parked device->host instead of dropped."""
         return sum(r.swap_out_tokens for r in self.iterations)
+
+    @property
+    def swapped_in_bytes(self) -> int:
+        """Total PCIe bytes of restores (what the link actually moved)."""
+        return sum(r.swap_in_bytes for r in self.iterations)
+
+    @property
+    def swapped_out_bytes(self) -> int:
+        """Total PCIe bytes of parks."""
+        return sum(r.swap_out_bytes for r in self.iterations)
 
     @property
     def swap_transfer_time(self) -> float:
@@ -283,15 +311,24 @@ class EchoEngine:
                  clock_model=None, calibrator: Optional[OnlineCalibrator] = None,
                  clock: str = "virtual", seed: int = 0,
                  max_batch_tokens: int = 2048, max_running: int = 64,
-                 host_kv_blocks: int = 0):
+                 host_kv_blocks: int = 0,
+                 io_spec: Optional[BlockIOSpec] = None):
         self.model = model
         self.policy = policy
         self.clock = clock
         self.pool = OfflinePool(block_size)
+        # byte pricing of this engine's blocks: derived from the model's
+        # architecture (paged KV pages vs. fixed-size state snapshots), the
+        # 8B-magnitude paged default on the model-less simulator path
+        if io_spec is None:
+            io_spec = (io_spec_for_model(model) if model is not None
+                       else paged_spec())
+        self.io = io_spec
         self.bm = BlockManager(num_blocks, block_size,
                                task_aware=policy.task_aware_kv,
                                rc_provider=self.pool.rc,
-                               host_blocks=host_kv_blocks)
+                               host_blocks=host_kv_blocks,
+                               io=io_spec)
         self.tm = time_model or TimeModel()
         # Ground-truth clock vs. scheduler estimate (§5 calibration loop):
         # `tm` is what the scheduler *believes*; `clock_model` is what the
@@ -316,8 +353,6 @@ class EchoEngine:
                 self.runner = StateRunner(model, params, num_blocks,
                                           block_size, max_pages_per_seq,
                                           chunk_size)
-                # state-snapshot families have no paged KV to stage host-side
-                self.bm.host = None
         # async swap/compute overlap (wall path): a single-worker copy
         # stream double-buffers payload staging against runner compute, with
         # per-block fences before first touch. Gated on the same switch the
@@ -336,6 +371,8 @@ class EchoEngine:
         self.now = 0.0
         self.stats = EngineStats()
         self._pending_swap_out = 0     # staged on an idle tick; next record
+        self._pending_swap_out_bytes = 0
+        self._pending_swap_in_bytes = 0
         self._pending_swap_wall = 0.0  # its wall time (wall-clock path)
         self.pending: List[Request] = []       # (arrival_time, rid) ordered
         self.listeners: List[EngineListener] = []
@@ -470,24 +507,30 @@ class EchoEngine:
         n += sum(1 for r in self.scheduler.running if not r.is_online)
         return n
 
-    def _execute_swaps(self) -> int:
-        """Dispatch the KV staging of this iteration's swap decisions.
+    def _execute_swaps(self) -> Tuple[int, int, int]:
+        """Dispatch the block staging of this iteration's swap decisions.
 
         With the async stager (wall path, overlap on) this only *launches*
         the transfers: device-side snapshots are dispatched here — before
-        any runner write, while an "out" block's pages are still intact —
+        any runner write, while an "out" block's payload is still intact —
         and the blocking copies run on the copy worker; the per-request
         fences in ``step`` complete whatever the plan actually touches.
-        Without it (overlap off, or no paged runner) payloads are staged
+        Without it (overlap off, or no backing runner) payloads are staged
         inline exactly as before. On the virtual path the journal is
-        drained for accounting alone. Returns swapped-OUT tokens (swap-in
-        tokens are known from the plan)."""
+        drained for accounting alone. Returns (swapped-out tokens,
+        swapped-out bytes, swapped-in bytes) — swap-in *tokens* are known
+        from the plan, but the link-clocked byte weights come from the
+        journal, where "in_lazy" restores correctly weigh zero."""
         events = self.bm.drain_swap_events()
         out_tokens = sum(hb.n_tokens for kind, _, hb in events
                          if kind == "out")
+        out_bytes = sum(hb.n_bytes for kind, _, hb in events
+                        if kind == "out")
+        in_bytes = sum(hb.n_bytes for kind, _, hb in events
+                       if kind == "in")
         if self._stager is not None:
             self._stager.launch(events)
-            return out_tokens
+            return out_tokens, out_bytes, in_bytes
         stage = self.runner is not None and hasattr(self.runner, "read_block")
         for kind, bid, hb in events:
             if kind == "out":
@@ -496,8 +539,11 @@ class EchoEngine:
             elif stage:
                 assert hb.payload is not None, \
                     f"swap-in of block hash {hb.hash} with no staged payload"
-                self.runner.write_block(bid, hb.payload)
-        return out_tokens
+                if kind == "in_lazy":
+                    self.runner.write_block_lazy(bid, hb.payload)
+                else:
+                    self.runner.write_block(bid, hb.payload)
+        return out_tokens, out_bytes, in_bytes
 
     def _fence(self, bids: Iterable[int]) -> None:
         """Complete in-flight staging on the blocks a runner call is about
@@ -505,32 +551,33 @@ class EchoEngine:
         if self._stager is not None:
             self._stager.fence(bids)
 
-    def _observe_swap_clock(self, swap_in_tokens: int, swap_out_tokens: int,
+    def _observe_swap_clock(self, swap_in_bytes: int, swap_out_bytes: int,
                             compute_time: float, iter_time: float,
                             swap_transfer: float) -> None:
         """Feed the calibrator's swap-term windows (ROADMAP: swap terms were
         static after ``fit_swap``): per-event copy-worker timings on the
         wall path, the ground-truth clock's transfer legs on the virtual
-        path, and — when overlap is active — the (compute, tokens, total)
-        triple that refits the launch overhead."""
+        path, and — when overlap is active — the (compute, bytes, total)
+        triple that refits the launch overhead. Byte-denominated: KV pages
+        and state snapshots feed one pool that recovers the link rate."""
         cal = self.calibrator
-        total_tokens = swap_in_tokens + swap_out_tokens
+        total_bytes = swap_in_bytes + swap_out_bytes
         if self._stager is not None and self.clock != "virtual":
             for n, dt in self._stager.drain_samples():
                 cal.observe_swap(n, dt)
         elif self.clock == "virtual":
             if not hasattr(self.clock_model, "swap_time"):
                 return
-            if swap_in_tokens:
-                cal.observe_swap(swap_in_tokens,
-                                 self.clock_model.swap_time(swap_in_tokens))
-            if swap_out_tokens:
-                cal.observe_swap(swap_out_tokens,
-                                 self.clock_model.swap_time(swap_out_tokens))
-        elif total_tokens and swap_transfer > 0.0:
-            cal.observe_swap(total_tokens, swap_transfer)
-        if total_tokens and getattr(self.tm, "swap_overlap", False):
-            cal.observe_overlap(compute_time, total_tokens, iter_time)
+            if swap_in_bytes:
+                cal.observe_swap(swap_in_bytes,
+                                 self.clock_model.swap_time(swap_in_bytes))
+            if swap_out_bytes:
+                cal.observe_swap(swap_out_bytes,
+                                 self.clock_model.swap_time(swap_out_bytes))
+        elif total_bytes and swap_transfer > 0.0:
+            cal.observe_swap(total_bytes, swap_transfer)
+        if total_bytes and getattr(self.tm, "swap_overlap", False):
+            cal.observe_overlap(compute_time, total_bytes, iter_time)
 
     # ------------------------------------------------------------- step
     def step(self) -> Optional[IterationRecord]:
@@ -539,9 +586,14 @@ class EchoEngine:
         plan = self.scheduler.schedule(self.now)
         ts0 = time.perf_counter()
         schedule_wall = ts0 - tsched
-        swap_out_tokens = self._execute_swaps() + self._pending_swap_out
+        out_tok, out_bytes, in_bytes = self._execute_swaps()
+        swap_out_tokens = out_tok + self._pending_swap_out
+        swap_out_bytes = out_bytes + self._pending_swap_out_bytes
+        swap_in_bytes = in_bytes + self._pending_swap_in_bytes
         swap_wall = time.perf_counter() - ts0 + self._pending_swap_wall
         self._pending_swap_out = 0
+        self._pending_swap_out_bytes = 0
+        self._pending_swap_in_bytes = 0
         self._pending_swap_wall = 0.0
         swap_in_tokens = plan.swap_in_tokens
         if plan.n_scheduled == 0 and not plan.swap_ins:
@@ -556,6 +608,8 @@ class EchoEngine:
                     for l in self.listeners:
                         l.on_preempt(req, self.now)
             self._pending_swap_out = swap_out_tokens
+            self._pending_swap_out_bytes = swap_out_bytes
+            self._pending_swap_in_bytes = swap_in_bytes
             self._pending_swap_wall += swap_wall
             # idle: advance to next arrival
             if self.pending:
@@ -629,8 +683,8 @@ class EchoEngine:
         # the wall path the copy worker really did stage concurrently — the
         # fence stalls inside the runner window are the exposed tail.
         clock = self.clock_model
-        transfer = ((clock.swap_time(swap_in_tokens)
-                     + clock.swap_time(swap_out_tokens))
+        transfer = ((clock.swap_time(swap_in_bytes)
+                     + clock.swap_time(swap_out_bytes))
                     if hasattr(clock, "swap_time") else 0.0)
         if self.clock == "virtual":
             compute_time = clock.batch_time(spans, dlens)
@@ -663,7 +717,7 @@ class EchoEngine:
         if self.calibrator is not None:
             # feed the observed clock back into the scheduler's estimate
             self.calibrator.observe(self.now, spans, dlens, compute_time)
-            self._observe_swap_clock(swap_in_tokens, swap_out_tokens,
+            self._observe_swap_clock(swap_in_bytes, swap_out_bytes,
                                      compute_time, iter_time, swap_transfer)
         for req, lg in emissions:               # tokens arrive at iteration end
             self._emit(req, lg)
@@ -694,7 +748,8 @@ class EchoEngine:
                     self.bm.block_size, online_kv,
                     cap_blocks=self.bm.host.capacity,
                     inflight_blocks=(st.inflight_blocks()
-                                     if st is not None else 0))
+                                     if st is not None else 0),
+                    io=self.io)
         t_start = self.now - iter_time
         rec = IterationRecord(
             t=self.now,
@@ -710,6 +765,8 @@ class EchoEngine:
             threshold_blocks=self.bm.threshold_blocks,
             swap_in_tokens=swap_in_tokens,
             swap_out_tokens=swap_out_tokens,
+            swap_in_bytes=swap_in_bytes,
+            swap_out_bytes=swap_out_bytes,
             host_blocks=len(self.bm.host) if self.bm.host is not None else 0,
             swap_transfer_time=swap_transfer,
             swap_exposed_time=swap_exposed,

@@ -19,8 +19,10 @@ from typing import Deque, Optional, Sequence, Tuple
 
 import numpy as np
 
-
-KV_BYTES_PER_TOKEN_8B = 131072   # 32 layers x 8 kv-heads x 128 hd x 2(kv) x fp16
+from repro.core.block_io import (  # noqa: F401  (KV_* kept as re-export)
+    KV_BYTES_PER_TOKEN_8B,
+    BlockIOSpec,
+)
 
 
 @dataclass
@@ -28,11 +30,11 @@ class TimeModel:
     alpha: float = 1e-9      # s / token^2  (prefill quadratic)
     beta: float = 1e-6       # s / token    (prefill linear)
     c: float = 1e-4          # s            (prefill floor)
-    gamma: float = 1e-7      # s / token    (decode max-pool)
+    gamma: float = 1e-7     # s / token    (decode max-pool)
     delta: float = 1e-7      # s / token    (decode mean-pool)
     d0: float = 1e-4         # s            (decode floor)
     lam: float = 0.8         # prefill/decode overlap coefficient
-    swap_tok: float = 0.0    # s / token    (host<->device KV over PCIe)
+    swap_byte: float = 0.0   # s / byte     (host<->device payload over PCIe)
     swap_floor: float = 0.0  # s            (per-transfer dispatch floor)
     swap_launch: float = 0.0  # s           (async copy launch/fence overhead)
     swap_overlap: bool = True  # overlap PCIe transfers with compute (Eq.9)
@@ -42,11 +44,12 @@ class TimeModel:
     def a100(cls, **overrides) -> "TimeModel":
         """Coefficients of LLaMA-3.1-8B-instruct magnitude on one A100-40G,
         structured per Eq.6-8 — the shared default for virtual-clock serving,
-        cluster simulation, benchmarks, and examples. Swap terms assume the
-        8B KV footprint over PCIe 4.0 x16 (~25 GB/s effective)."""
+        cluster simulation, benchmarks, and examples. Swap terms price PCIe
+        4.0 x16 (~25 GB/s effective); what a block *weighs* comes from the
+        runner family's ``BlockIOSpec``, not from the link model."""
         kw = dict(alpha=2e-7, beta=1e-4, c=2e-3, gamma=3e-5, delta=3e-5,
                   d0=2e-3, lam=0.9,
-                  swap_tok=cls.pcie_swap_tok(25.0), swap_floor=1e-4,
+                  swap_byte=cls.pcie_swap_byte(25.0), swap_floor=1e-4,
                   swap_launch=5e-5)
         kw.update(overrides)
         return cls(**kw)
@@ -59,16 +62,15 @@ class TimeModel:
         PCIe 5.0 x16 doubles the swap bandwidth (~50 GB/s effective)."""
         kw = dict(alpha=8e-8, beta=4e-5, c=1e-3, gamma=1.8e-5, delta=1.8e-5,
                   d0=1.2e-3, lam=0.92,
-                  swap_tok=cls.pcie_swap_tok(50.0), swap_floor=5e-5,
+                  swap_byte=cls.pcie_swap_byte(50.0), swap_floor=5e-5,
                   swap_launch=2e-5)
         kw.update(overrides)
         return cls(**kw)
 
     @staticmethod
-    def pcie_swap_tok(pcie_gbps: float,
-                      kv_bytes_per_token: int = KV_BYTES_PER_TOKEN_8B) -> float:
-        """Per-token host<->device transfer seconds from link bandwidth."""
-        return kv_bytes_per_token / (pcie_gbps * 1e9)
+    def pcie_swap_byte(pcie_gbps: float) -> float:
+        """Per-byte host<->device transfer seconds from link bandwidth."""
+        return 1.0 / (pcie_gbps * 1e9)
 
     HW_PROFILES = ("a100", "h100")
 
@@ -115,21 +117,24 @@ class TimeModel:
             return tp + td
         return self.lam * max(tp, td) + (1.0 - self.lam) * min(tp, td)
 
-    def swap_time(self, n_tokens: int) -> float:
-        """Host<->device KV transfer time for ``n_tokens`` over PCIe — the
-        cost side of the swap-in-vs-recompute decision, and the term charged
-        against the SLO budget when a plan carries swap traffic."""
-        if n_tokens <= 0:
+    def swap_time(self, n_bytes: int) -> float:
+        """Host<->device transfer time for ``n_bytes`` of block payload over
+        PCIe — the cost side of the swap-in-vs-recompute decision, and the
+        term charged against the SLO budget when a plan carries swap traffic.
+        Callers convert blocks to bytes through the runner family's
+        ``BlockIOSpec`` so paged KV pages and fixed-size state snapshots are
+        charged by what they actually move."""
+        if n_bytes <= 0:
             return 0.0
-        return self.swap_tok * n_tokens + self.swap_floor
+        return self.swap_byte * n_bytes + self.swap_floor
 
-    def swap_equiv_tokens(self, n_tokens: int, trips: int = 2) -> float:
+    def swap_equiv_tokens(self, n_bytes: int, trips: int = 2) -> float:
         """A swap expressed in recompute-token units (Eq.4's benefit and
         punishment are token-denominated): transfer seconds divided by the
         linear prefill cost per token. Defaults to the full round trip
         (``trips=2``, out now + in later) — what evicting a future-needed
         block to the host tier costs instead of its recompute."""
-        return trips * self.swap_time(n_tokens) / max(self.beta, 1e-12)
+        return trips * self.swap_time(n_bytes) / max(self.beta, 1e-12)
 
     def overlapped_iteration_time(self, compute: float,
                                   transfer: float) -> float:
@@ -194,10 +199,11 @@ class TimeModel:
         self.d0 = float(max(min(np.min(ts), max(float(coef[2]), 1e-6)), 1e-6))
 
     def fit_swap(self, samples: Sequence[Tuple[int, float]]) -> None:
-        """samples: (n_tokens, seconds) for host<->device block transfers —
+        """samples: (n_bytes, seconds) for host<->device block transfers —
         micro-benchmarked like Eq.6-8 (calibration support for the PCIe
         terms; a fit on real ``jax.device_put`` timings replaces the link
-        presets)."""
+        presets). Byte-denominated, so KV-page and state-snapshot payloads
+        land in one pool and jointly recover the link rate."""
         if len(samples) < 2:
             return
         ns = np.array([s[0] for s in samples], np.float64)
@@ -205,12 +211,12 @@ class TimeModel:
         basis = np.stack([ns, np.ones_like(ns)], axis=1)
         coef, *_ = np.linalg.lstsq(basis, ts, rcond=None)
         coef = np.maximum(coef, 0.0)
-        self.swap_tok = float(coef[0])
+        self.swap_byte = float(coef[0])
         self.swap_floor = float(max(min(np.min(ts), max(float(coef[1]), 0.0)),
                                     0.0))
 
     def fit_swap_overlap(self, samples: Sequence[Tuple[float, int, float]]) -> None:
-        """samples: (compute_seconds, transfer_tokens, total_seconds) for
+        """samples: (compute_seconds, transfer_bytes, total_seconds) for
         iterations that carried overlapped swap traffic. Fits the launch
         overhead as the median residual of the max-model — robust to the odd
         iteration where a fence exposed a partial tail."""
@@ -270,10 +276,11 @@ class PerturbedTimeModel:
             t *= self.contention_scale
         return t
 
-    def swap_time(self, n_tokens: int) -> float:
+    def swap_time(self, n_bytes: int) -> float:
         """PCIe transfers share the systematic drift but not the compute
-        jitter (the link is not the contended resource)."""
-        return self.base.swap_time(n_tokens) * self.scale
+        jitter (the link is not the contended resource). Byte-denominated,
+        passed straight through to the base model's byte terms."""
+        return self.base.swap_time(n_bytes) * self.scale
 
     @property
     def swap_overlap(self) -> bool:
@@ -344,15 +351,25 @@ class MemoryPredictor:
     def host_reserve_blocks(self, block_size: int,
                             current_online_tokens: float = 0.0,
                             cap_blocks: Optional[int] = None,
-                            inflight_blocks: int = 0) -> int:
+                            inflight_blocks: int = 0,
+                            io: Optional[BlockIOSpec] = None) -> int:
         """Host-tier headroom (§5.3 applied to the swap layer): slots to
         keep clear of low-priority swaps so a predicted online burst can
-        always park the KV it preempts instead of losing it to recompute.
+        always park the state it preempts instead of losing it to recompute.
+        With an ``io`` spec the burst is priced in bytes and converted back
+        through the family's per-slot payload — a host slot holds one full
+        block, whatever that block weighs (KV pages or one fixed-size state
+        snapshot) — so paged and state families reserve uniformly.
         ``inflight_blocks`` — swap payloads still staging on the async copy
         stream — extend the reserve: a slot whose transfer has not landed
         cannot be re-purposed without losing the work in flight."""
         inc = max(self.predict() - current_online_tokens, 0.0)
-        reserve = int(math.ceil(inc / block_size)) + max(inflight_blocks, 0)
+        inc_blocks = int(math.ceil(inc / block_size))
+        if io is not None:
+            slot_bytes = max(io.block_bytes(block_size), 1)
+            inc_bytes = inc_blocks * io.block_bytes(block_size)
+            inc_blocks = int(math.ceil(inc_bytes / slot_bytes))
+        reserve = inc_blocks + max(inflight_blocks, 0)
         if cap_blocks is not None:
             reserve = min(reserve, cap_blocks // 2)
         return reserve

@@ -106,40 +106,56 @@ class Scheduler:
                                respect_threshold=respect_threshold)
         return res is not None
 
-    def _plan_transfer_time(self, swap_in_tokens: int) -> float:
-        """Total PCIe seconds a plan carrying ``swap_in_tokens`` of swap-in
+    def _restore_bytes(self, n_tokens: int) -> int:
+        """Link bytes ONE swap-in entry of ``n_tokens`` puts on the PCIe
+        stream, per the family's io spec: every restored KV page for paged
+        attention, a single fixed-size snapshot (the last boundary) for
+        restore_last_only state families."""
+        return self.bm.io.restore_bytes(n_tokens, self.bm.block_size)
+
+    def _swap_in_bytes(self, plan: Plan) -> int:
+        """Byte weight of a plan's swap-in traffic. Priced per entry — each
+        ``swap_ins`` element is one ``BlockManager.swap_in`` call, which
+        journals exactly one non-lazy upload for a restore_last_only family
+        — so this matches the engine's journal accounting 1:1."""
+        return sum(self._restore_bytes(n) for _, n in plan.swap_ins)
+
+    def _plan_transfer_time(self, swap_in_bytes: int) -> float:
+        """Total PCIe seconds a plan carrying ``swap_in_bytes`` of swap-in
         traffic puts on the copy stream — including the swap-outs this
         scheduling pass already journaled (the engine clocks both
         directions)."""
         # NOTE: ``is not None`` — HostTier defines __len__, so a merely
         # *empty* tier is falsy while its journal can still carry undrained
         # swap-out events from this very scheduling pass
-        out_tokens = (self.bm.pending_swap_out_tokens()
-                      if self.bm.host is not None else 0)
+        out_bytes = (self.bm.pending_swap_out_bytes()
+                     if self.bm.host is not None else 0)
         t = 0.0
-        if swap_in_tokens:
-            t += self.tm.swap_time(swap_in_tokens)
-        if out_tokens:
-            t += self.tm.swap_time(out_tokens)
+        if swap_in_bytes:
+            t += self.tm.swap_time(swap_in_bytes)
+        if out_bytes:
+            t += self.tm.swap_time(out_bytes)
         return t
 
-    def _plan_time(self, spans, dlens, swap_in_tokens: int) -> float:
+    def _plan_time(self, spans, dlens, swap_in_bytes: int) -> float:
         """Iteration-time estimate for a (spans, decodes, swap-in) shape:
         compute overlapped with the plan's PCIe traffic — under overlap only
         the exposed transfer tail (plus the launch overhead) is charged on
         top of compute; with ``swap_overlap=False`` the serial sum."""
         compute = self.tm.batch_time(spans, dlens)
         return self.tm.overlapped_iteration_time(
-            compute, self._plan_transfer_time(swap_in_tokens))
+            compute, self._plan_transfer_time(swap_in_bytes))
 
     def _swap_in_worthwhile(self, start: int, n_tokens: int,
                             plan: Optional[Plan] = None) -> bool:
         """The per-candidate transfer-vs-recompute decision: restoring
-        ``n_tokens`` of KV at context depth ``start`` over PCIe must beat
-        re-prefilling the same span (Eq.6 increment). With the default
-        coefficients swap wins by ~20x on linear cost — but a deep-context
-        span's quadratic term can tip either way, so it is priced, not
-        assumed.
+        ``n_tokens`` of cached state at context depth ``start`` over PCIe
+        must beat re-prefilling the same span (Eq.6 increment). Priced in
+        bytes through the family's io spec: with the default coefficients a
+        paged-KV swap wins by ~20x on linear cost — but a deep-context
+        span's quadratic term can tip either way — and a fixed-size state
+        snapshot wins by orders of magnitude more, since its link cost does
+        not grow with the restored span at all.
 
         Under swap/compute overlap a transfer that LOSES the raw seconds
         race gets a second chance at its *marginal iteration time*: hidden
@@ -150,7 +166,7 @@ class Scheduler:
         tier, and that displacement cost is real even when the link time is
         hidden — measured on the §7.1 burst scenario, undiscounted
         eviction-funded restores erase the entire overlap win."""
-        serial_wins = (self.tm.swap_time(n_tokens)
+        serial_wins = (self.tm.swap_time(self._restore_bytes(n_tokens))
                        < self.tm.prefill_time([(start, start + n_tokens)]))
         if serial_wins or plan is None or not self.tm.swap_overlap:
             return serial_wins
@@ -160,10 +176,11 @@ class Scheduler:
         spans = [(r.computed_tokens, r.computed_tokens + c)
                  for r, c in plan.prefills]
         dlens = [r.total_len + 1 for r in plan.decodes]
+        in_bytes = self._swap_in_bytes(plan)
         t_swap = self._plan_time(spans, dlens,
-                                 plan.swap_in_tokens + n_tokens)
+                                 in_bytes + self._restore_bytes(n_tokens))
         t_recompute = self._plan_time(spans + [(start, start + n_tokens)],
-                                      dlens, plan.swap_in_tokens)
+                                      dlens, in_bytes)
         return t_swap < t_recompute
 
     def _try_swap_in(self, req: Request, now: float, limit: int,
@@ -324,8 +341,12 @@ class Scheduler:
             rc = self.bm.rc_provider(b.hash) + b.unfinished_owners
             if rc > 0:
                 if self.bm.would_swap(self.bm._priority(b)):
-                    pun += min(self.tm.swap_equiv_tokens(b.n_tokens),
-                               float(b.n_tokens))
+                    # round trip priced in the block's actual link weight
+                    # (KV pages or one fixed-size snapshot), capped at the
+                    # full recompute the host tier saves
+                    pun += min(self.tm.swap_equiv_tokens(
+                        self.bm.io.block_bytes(b.n_tokens)),
+                        float(b.n_tokens))
                 else:
                     pun += b.n_tokens
         return pun
@@ -340,7 +361,7 @@ class Scheduler:
         spans = [(r.computed_tokens, r.computed_tokens + c)
                  for r, c in plan.prefills]
         dlens = [r.total_len + 1 for r in plan.decodes]
-        return self._plan_time(spans, dlens, plan.swap_in_tokens)
+        return self._plan_time(spans, dlens, self._swap_in_bytes(plan))
 
     # ------------------------------------------------------------- schedule
     def schedule(self, now: float) -> Plan:
@@ -507,7 +528,7 @@ class Scheduler:
         # costs more than the hidden seconds saved. The overlap discount
         # lives where latency is the question: ``est_time``/the SLO budget
         # (``_estimate``) and the execution clock.
-        d_time = t1 - t0 + self.tm.swap_time(host_take)
+        d_time = t1 - t0 + self.tm.swap_time(self._restore_bytes(host_take))
         # benefit counts the *progress* incl. reused prefix (recompute avoided)
         d_benefit = float(chunk + cached) if req.computed_tokens == 0 else float(chunk)
         return _Candidate(req, chunk, cached, host_take, new_blocks, pun,
@@ -559,8 +580,9 @@ class Scheduler:
                             for r, c in plan.prefills]
                            + [(best.cached, best.cached + best.chunk)])
             dlens = [r.total_len + 1 for r in plan.decodes]
-            t_new = self._plan_time(trial_spans, dlens,
-                                    plan.swap_in_tokens + best.host_take)
+            t_new = self._plan_time(
+                trial_spans, dlens,
+                self._swap_in_bytes(plan) + self._restore_bytes(best.host_take))
             if self.policy.use_estimator and t_new > budget:
                 break
             req.admit(now)

@@ -44,7 +44,7 @@ import jax
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import ALL_POLICIES, SLO, EchoEngine, TimeModel
-from repro.core.estimator import KV_BYTES_PER_TOKEN_8B
+from repro.core.block_io import BlockIOSpec, io_spec_for_model, paged_spec
 from repro.data import BurstyTrace, make_offline_corpus, make_online_requests
 from repro.models import Model
 from repro.serving import AdmissionConfig, EchoService
@@ -54,20 +54,16 @@ POLICY_BY_NAME = {p.name: p for p in ALL_POLICIES}
 DEFAULT_ARCH = "qwen3-4b"
 
 
-def kv_bytes_per_token(cfg=None) -> int:
-    """KV footprint per token: from the served config when there is one,
-    else the 8B-magnitude default the virtual-clock paths assume."""
-    if cfg is None:
-        return KV_BYTES_PER_TOKEN_8B
-    n_attn = sum(1 for k in cfg.attn_layers if k in ("attn", "moe"))
-    return max(n_attn * cfg.num_kv_heads * cfg.head_dim * 2 * 2, 1)  # k+v, fp16
-
-
-def host_kv_blocks(args, cfg=None, block_size: int = 16) -> int:
-    """--host-kv-gb translated to host-tier blocks (0 with --no-swap)."""
+def host_kv_blocks(args, io: BlockIOSpec = None,
+                   block_size: int = 16) -> int:
+    """--host-kv-gb translated to host-tier slots through the served
+    family's block I/O spec (0 with --no-swap): one slot parks one block's
+    payload — a page of KV for attention models, one fixed-size state
+    snapshot for SSM/hybrid ones — so the same GB budget buys far more
+    slots on a state-family model."""
     if args.no_swap or args.host_kv_gb <= 0:
         return 0
-    per_block = kv_bytes_per_token(cfg) * block_size
+    per_block = max((io or paged_spec()).block_bytes(block_size), 1)
     return max(int(args.host_kv_gb * 1e9 / per_block), 1)
 
 
@@ -170,7 +166,7 @@ def resolve_policy(args):
 
 
 def clock_models(args, *, quadratic_prefill: bool = True,
-                 swap_tok: float = None):
+                 swap_byte: float = None):
     """Ground-truth clocks from --hw-profile/--hw-drift/--hw-jitter; None
     when they match the stock estimate (classic perfect-clock serving)."""
     names = [n.strip() for n in args.hw_profile.split(",") if n.strip()]
@@ -181,8 +177,8 @@ def clock_models(args, *, quadratic_prefill: bool = True,
     for i, name in enumerate(names):
         kw = dict(quadratic_prefill=quadratic_prefill,
                   swap_overlap=not args.no_swap_overlap)
-        if swap_tok is not None:
-            kw["swap_tok"] = swap_tok
+        if swap_byte is not None:
+            kw["swap_byte"] = swap_byte
         base = TimeModel.preset(name, **kw)
         if perturbed:
             out.append(base.perturbed(scale=args.hw_drift,
@@ -238,8 +234,8 @@ def serve_cluster(args) -> None:
     from repro.data import default_tenants, make_multi_tenant_workload
 
     policy = resolve_policy(args)
-    swap_tok = TimeModel.pcie_swap_tok(args.pcie_gbps)
-    tm = TimeModel.a100(swap_tok=swap_tok,
+    swap_byte = TimeModel.pcie_swap_byte(args.pcie_gbps)
+    tm = TimeModel.a100(swap_byte=swap_byte,
                         swap_overlap=not args.no_swap_overlap)
     base = default_tenants(args.tenants)
     scale = args.online_rate / sum(t.online_rate for t in base)
@@ -253,7 +249,8 @@ def serve_cluster(args) -> None:
                            router_policy=args.router,
                            num_blocks=args.num_blocks,
                            time_model=tm,
-                           clock_models=clock_models(args, swap_tok=swap_tok),
+                           clock_models=clock_models(args,
+                                                     swap_byte=swap_byte),
                            host_kv_blocks=host_kv_blocks(args),
                            seed=args.seed)
     service = EchoService(sim, admission=admission_config(args))
@@ -352,10 +349,11 @@ def main() -> None:
     policy = resolve_policy(args)
 
     quad = cfg.family not in ("ssm", "hybrid")
-    swap_tok = TimeModel.pcie_swap_tok(args.pcie_gbps, kv_bytes_per_token(cfg))
-    tm = TimeModel.a100(quadratic_prefill=quad, swap_tok=swap_tok,
+    io = io_spec_for_model(model)
+    swap_byte = TimeModel.pcie_swap_byte(args.pcie_gbps)
+    tm = TimeModel.a100(quadratic_prefill=quad, swap_byte=swap_byte,
                         swap_overlap=not args.no_swap_overlap)
-    clocks = clock_models(args, quadratic_prefill=quad, swap_tok=swap_tok)
+    clocks = clock_models(args, quadratic_prefill=quad, swap_byte=swap_byte)
     if clocks and len(clocks) > 1:
         print(f"warning: --replicas 1 uses only the first --hw-profile "
               f"({args.hw_profile.split(',')[0].strip()}); extra profiles "
@@ -374,7 +372,7 @@ def main() -> None:
                      block_size=16, chunk_size=64,
                      max_pages_per_seq=32, time_model=tm,
                      clock_model=clocks[0] if clocks else None,
-                     host_kv_blocks=host_kv_blocks(args, cfg))
+                     host_kv_blocks=host_kv_blocks(args, io))
     service = EchoService(eng, admission=admission_config(args))
     tracer, registry = setup_obs(args, service)
     stats = service.drive(online + offline, max_iters=100_000,

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.block_io import io_spec_for_model
 from repro.kernels import ref as kref
 from repro.models import transformer as tfm
 from repro.models.common import rms_norm, rope_angles, swiglu
@@ -108,6 +109,7 @@ class PagedRunner:
         self.num_pages = num_pages
         self.max_pages = max_pages_per_seq
         self.chunk_size = chunk_size
+        self.io = io_spec_for_model(model)   # paged: per-token KV payload
         dt = model.dtype
         shp = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
         self.pages = []
@@ -249,6 +251,17 @@ class PagedRunner:
         staged = self.stage_payload(payload)
         self.pages = self._write_block_jit(self.pages, jnp.int32(bid),
                                            staged)
+
+    def write_block_lazy(self, bid: int, payload) -> None:
+        """Protocol completeness: paged KV has no lazy restore (attention
+        reads every cached position, so every restored page must be device-
+        resident) — a lazy write is a full write. The BlockManager never
+        journals "in_lazy" for a paged io spec."""
+        self.write_block(bid, payload)
+
+    def bytes_per_block(self, n_tokens: int) -> int:
+        """Link weight of one block holding ``n_tokens`` (per-token KV)."""
+        return self.io.block_bytes(n_tokens)
 
     # ------------------------------------------------------------- API
     def prefill_chunk(self, token_chunk: Sequence[int], ctx_len: int,

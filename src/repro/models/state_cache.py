@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.block_io import io_spec_for_model
 from repro.models import transformer as tfm
 from repro.models.common import rms_norm
 from repro.models.model import Model
@@ -49,8 +50,15 @@ class StateRunner:
         self.block_size = block_size
         # hybrid: the attention ring must cover the local window
         self._state_len = 1 if self._pure_ssm else max(cfg.window, 1)
+        self.io = io_spec_for_model(model)   # state: fixed-size snapshots
         self.pool: Dict[int, object] = {}       # bid -> state pytree (numpy)
         self.live: Dict[int, object] = {}       # rid -> state pytree (jnp)
+        # position the live state is valid for: a preempted request can be
+        # re-admitted with a LONGER cached prefix than it had computed (the
+        # pool gained boundaries meanwhile), making the surviving live
+        # state stale for the new resume point — it must only short-circuit
+        # the boundary-snapshot resume when the positions agree
+        self._live_pos: Dict[int, int] = {}     # rid -> tokens consumed
         self._span_jit = {}
         self._decode_jit = jax.jit(model.decode_step)
 
@@ -116,7 +124,7 @@ class StateRunner:
                       block_table: Sequence[int], rid: Optional[int] = None):
         bs = self.block_size
         assert ctx_len % bs == 0, "resume points are block-aligned"
-        if rid in self.live:
+        if rid in self.live and self._live_pos.get(rid) == ctx_len:
             state = self.live[rid]
         elif ctx_len > 0 and block_table[ctx_len // bs - 1] in self.pool:
             state = jax.tree.map(jnp.asarray,
@@ -146,6 +154,7 @@ class StateRunner:
                 self.pool[block_table[(p + 1) // bs - 1]] = \
                     jax.tree.map(np.asarray, state)
         self.live[rid] = state
+        self._live_pos[rid] = ctx_len + len(toks)
         return np.asarray(logits)
 
     def decode(self, tokens: Sequence[int], block_tables: List[Sequence[int]],
@@ -160,6 +169,7 @@ class StateRunner:
                                          jnp.asarray([t], jnp.int32), state,
                                          jnp.asarray([p], jnp.int32))
             self.live[rid] = state
+            self._live_pos[rid] = p + 1
             if (p + 1) % bs == 0 and (p + 1) // bs - 1 < len(bt):
                 self.pool[bt[(p + 1) // bs - 1]] = jax.tree.map(np.asarray, state)
             out[i] = np.asarray(lg[0])
@@ -167,3 +177,55 @@ class StateRunner:
 
     def release(self, rid: int) -> None:
         self.live.pop(rid, None)
+        self._live_pos.pop(rid, None)
+
+    # --------------------------------------------------- host tier protocol
+    # Same split-phase block I/O protocol as PagedRunner, over boundary
+    # snapshots instead of KV pages. The pool already lives host-side
+    # (entries are numpy pytrees, replaced wholesale and never mutated in
+    # place), so snapshot/materialize are reference hand-offs, not copies —
+    # the copy stream's worker can hold them race-free while the owner
+    # thread keeps dispatching compute.
+    def snapshot_block(self, bid: int):
+        """Phase 1 of a device->host block read: hand out the boundary
+        snapshot recorded for ``bid``. Every committed block has one — the
+        span function and decode store a snapshot at each crossed boundary,
+        and swap-in re-registers restored payloads."""
+        snap = self.pool.get(bid)
+        assert snap is not None, f"no boundary snapshot for block {bid}"
+        return snap
+
+    @staticmethod
+    def materialize(snapshot):
+        """Phase 2: ensure the snapshot is host numpy. Pool entries already
+        are (a no-op tree pass); entries staged device-side by a recent
+        ``write_block`` get pulled across here."""
+        return jax.tree.map(np.asarray, snapshot)
+
+    def read_block(self, bid: int):
+        """Synchronous device->host staging of one boundary snapshot."""
+        return self.materialize(self.snapshot_block(bid))
+
+    @staticmethod
+    def stage_payload(payload):
+        """Host->device upload of one snapshot (the H2D half of swap-in) —
+        safe on the copy worker; the pool insert stays with the owner."""
+        return jax.tree.map(lambda a: jax.device_put(jnp.asarray(a)), payload)
+
+    def write_block(self, bid: int, payload) -> None:
+        """Restore one boundary snapshot device-side: upload (no-op if the
+        copy worker already staged it) and re-register under ``bid``. The
+        next ``prefill_chunk`` resume from this boundary pays no H2D copy."""
+        self.pool[bid] = self.stage_payload(payload)
+
+    def write_block_lazy(self, bid: int, payload) -> None:
+        """Re-register a host payload under ``bid`` WITHOUT uploading — the
+        ``"in_lazy"`` half of restore_last_only swap-in: earlier boundaries
+        of a restored prefix only matter for future mid-prefix resumes, and
+        resume lazily uploads (``jnp.asarray``) whatever the pool holds."""
+        self.pool[bid] = payload
+
+    def bytes_per_block(self, n_tokens: int) -> int:
+        """Link weight of one block: the fixed-size snapshot, regardless of
+        how deep the boundary sits in the prefix."""
+        return self.io.block_bytes(n_tokens)

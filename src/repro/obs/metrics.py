@@ -33,6 +33,9 @@ REL_ERR_BUCKETS = (0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0,
                    2.5, 5.0)
 FRACTION_BUCKETS = (0.01, 0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7,
                     0.8, 0.9, 0.95, 0.99, 1.0)
+# Per-iteration PCIe swap payloads (bytes): state-family snapshots sit in
+# the 10 KB - 1 MB decades, paged KV restores in 1 MB - 1 GB.
+BYTES_BUCKETS = (1e4, 1e5, 1e6, 4e6, 1.6e7, 6.4e7, 2.56e8, 1e9)
 
 
 class _CounterChild:

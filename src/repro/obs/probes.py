@@ -19,7 +19,7 @@ from typing import List, Tuple
 
 from repro.core.engine import (EchoEngine, EngineListener, IterationDetail,
                                IterationRecord)
-from repro.obs.metrics import (FRACTION_BUCKETS, ITER_BUCKETS,
+from repro.obs.metrics import (BYTES_BUCKETS, FRACTION_BUCKETS, ITER_BUCKETS,
                                LATENCY_BUCKETS, REL_ERR_BUCKETS,
                                MetricsRegistry)
 
@@ -158,6 +158,21 @@ class EngineProbe(EngineListener):
                        ("replica", "state")).labels(rep, k)
             for k in ("free", "running", "cached", "threshold",
                       "host_used", "host_capacity")}
+        # family-labeled link traffic: the same iteration record reads as
+        # per-token KV pages on a paged engine and as fixed-size snapshots
+        # on a state-family one — the byte histograms keep them comparable
+        fam = engine.bm.io.family
+        swap_bytes = r.histogram(
+            "swap_bytes", "per-iteration PCIe payload over the host tier",
+            ("replica", "family", "direction"), buckets=BYTES_BUCKETS)
+        self._swap_in_bytes = swap_bytes.labels(rep, fam, "in")
+        self._swap_out_bytes = swap_bytes.labels(rep, fam, "out")
+        self._swap_bytes_total = r.counter(
+            "swap_bytes_total", "cumulative PCIe bytes over the host tier",
+            ("replica", "family", "direction"))
+        self._swap_in_bytes_c = self._swap_bytes_total.labels(rep, fam, "in")
+        self._swap_out_bytes_c = self._swap_bytes_total.labels(rep, fam,
+                                                               "out")
         self._swap_exposed = r.histogram(
             "swap_exposed_seconds", "per-iteration swap tail not hidden "
             "under compute", ("replica",), buckets=ITER_BUCKETS).labels(rep)
@@ -204,6 +219,12 @@ class EngineProbe(EngineListener):
                 self._ewma_swap.set(cal.ewma_swap_err)
             self._refits_iter.set(cal.refits)
             self._refits_swap.set(cal.swap_refits)
+        if rec.swap_in_bytes > 0:
+            self._swap_in_bytes.observe(rec.swap_in_bytes)
+            self._swap_in_bytes_c.inc(rec.swap_in_bytes)
+        if rec.swap_out_bytes > 0:
+            self._swap_out_bytes.observe(rec.swap_out_bytes)
+            self._swap_out_bytes_c.inc(rec.swap_out_bytes)
         if rec.swap_transfer_time > 0:
             self._swap_exposed.observe(rec.swap_exposed_time)
             self._swap_hidden.observe(

@@ -193,7 +193,7 @@ def test_swap_enabled_engine_reduces_punishment():
 def test_swap_in_rejected_when_transfer_loses_to_recompute():
     """The decision is priced, not assumed: with a pathologically slow link
     the scheduler must keep recomputing rather than swap in."""
-    slow = TimeModel.a100(swap_tok=10.0)      # 10 s/token: PCIe from hell
+    slow = TimeModel.a100(swap_byte=1e-3)     # ~131 s/token: PCIe from hell
     eng = _sim_engine(256, tm=slow)
     for r in _burst_workload():
         eng.submit(r)
@@ -217,16 +217,18 @@ def test_swap_charged_against_slo_budget():
     with_swap = sched._estimate(plan)
     plan2 = Plan(prefills=[(r, 32)])
     without = sched._estimate(plan2)
-    assert with_swap == pytest.approx(without + eng.tm.swap_time(32))
+    link = eng.tm.swap_time(sched._restore_bytes(32))
+    assert with_swap == pytest.approx(without + link)
 
     eng = _sim_engine(256)                    # overlap on by default
     sched = eng.scheduler
     plan = Plan(prefills=[(r, 32)], swap_ins=[(r, 32)])
     overlapped = sched._estimate(plan)
     compute = sched._estimate(Plan(prefills=[(r, 32)]))
+    link = eng.tm.swap_time(sched._restore_bytes(32))
     assert overlapped == pytest.approx(
-        eng.tm.overlapped_iteration_time(compute, eng.tm.swap_time(32)))
-    assert compute < overlapped <= compute + eng.tm.swap_time(32)
+        eng.tm.overlapped_iteration_time(compute, link))
+    assert compute < overlapped <= compute + link
 
 
 # ------------------------------------------------------- abort across tiers

@@ -1,0 +1,206 @@
+"""State-family tiered memory: device->host->device snapshot round trips
+must be bit-exact (same tokens with the swap tier on and off) on both the
+pure-SSM (mamba2) and hybrid (recurrentgemma) paths, abort-after-preempt
+must release parked snapshot slots, and the byte-denominated estimator
+terms must behave across families (mixed-payload fit_swap, perturbed
+pass-through)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ECHO, SLO, EchoEngine, Request, TaskType, TimeModel
+from repro.core.block_io import (KV_BYTES_PER_TOKEN_8B, io_spec_for_model,
+                                 paged_spec, state_spec)
+from repro.core.simulator import clone_requests
+from repro.models import Model
+from repro.serving import EchoService, HandleStatus
+
+STATE_ARCHS = ("mamba2-1.3b", "recurrentgemma-9b")
+
+
+def _state_model(arch):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    kinds = set(cfg.attn_layers)
+    bs = cfg.ssm_chunk if kinds == {"ssm"} else 16
+    return cfg, model, params, bs
+
+
+def _tiering_workload(cfg, bs, seed=3):
+    """One shared document + pooled questions (the doc's snapshots keep
+    rc > 0 while any question is pending) and an online burst sized to
+    flush the doc off the tight device pool mid-run."""
+    rng = np.random.default_rng(seed)
+    doc = tuple(int(x) for x in rng.integers(0, cfg.vocab_size, 3 * bs))
+    reqs = []
+    for i in range(6):
+        q = tuple(int(x) for x in rng.integers(0, cfg.vocab_size, 7))
+        reqs.append(Request(prompt=doc + q, max_new_tokens=4,
+                            task_type=TaskType.OFFLINE))
+    for i in range(3):
+        p = tuple(int(x) for x in rng.integers(0, cfg.vocab_size, 3 * bs))
+        reqs.append(Request(prompt=p, max_new_tokens=4,
+                            task_type=TaskType.ONLINE,
+                            arrival_time=0.0004 * (i + 1),
+                            slo=SLO(30.0, 5.0)))
+    return reqs
+
+
+def _run(model, params, bs, reqs, host_blocks):
+    eng = EchoEngine(model, params, ECHO, num_blocks=8, block_size=bs,
+                     chunk_size=2 * bs, max_pages_per_seq=16,
+                     max_running=2, host_kv_blocks=host_blocks)
+    for r in clone_requests(reqs, preserve_rid=True):
+        eng.submit(r)
+    stats = eng.run(max_iters=2000)
+    toks = {r.rid: list(r.output_tokens) for r in stats.finished}
+    return eng, stats, toks
+
+
+@pytest.mark.parametrize("arch", STATE_ARCHS)
+def test_state_tier_roundtrip_bit_exact(arch):
+    """Snapshots evicted to the host tier and restored over the (virtual)
+    link must resume generation bit-exactly: the swap-on run emits the SAME
+    tokens as the recompute-only run, while actually moving snapshot
+    traffic both ways."""
+    cfg, model, params, bs = _state_model(arch)
+    reqs = _tiering_workload(cfg, bs)
+    eng_off, stats_off, toks_off = _run(model, params, bs, reqs, 0)
+    eng_on, stats_on, toks_on = _run(model, params, bs, reqs, 32)
+    assert eng_on.bm.io.family == "state"
+    assert len(toks_on) == len(reqs)
+    assert toks_on == toks_off, \
+        "host-tier round trips must not change generated tokens"
+    assert eng_on.bm.metrics.swapped_out_tokens > 0, \
+        "scenario must park snapshots on the host tier"
+    assert eng_on.bm.metrics.swapped_in_tokens > 0, \
+        "scenario must restore snapshots from the host tier"
+    assert eng_on.bm.metrics.swapped_in_bytes > 0
+    assert eng_on.bm.metrics.swapped_out_bytes > 0
+    # a restore moves at most one fixed-size snapshot per swapped-in block
+    per_block = eng_on.bm.io.block_bytes(bs)
+    assert eng_on.bm.metrics.swapped_out_bytes % per_block == 0
+    assert stats_on.slo_attainment("ttft") >= stats_off.slo_attainment("ttft")
+    assert stats_on.offline_throughput() >= stats_off.offline_throughput(), \
+        "snapshot restore must not lose to recompute-only"
+
+
+@pytest.mark.parametrize("arch", STATE_ARCHS)
+def test_state_restore_priced_as_one_snapshot(arch):
+    """The scheduler's swap-in price for a state-family prefix is ONE
+    fixed-size snapshot regardless of prefix depth (restore_last_only) —
+    never the per-token paged price."""
+    cfg, model, params, bs = _state_model(arch)
+    eng = EchoEngine(model, params, ECHO, num_blocks=8, block_size=bs,
+                     chunk_size=2 * bs, max_pages_per_seq=16,
+                     host_kv_blocks=8)
+    sched = eng.scheduler
+    one = eng.bm.io.block_bytes(bs)
+    assert sched._restore_bytes(bs) == one
+    assert sched._restore_bytes(4 * bs) == one, \
+        "restore needs only the last boundary snapshot"
+    assert one != paged_spec().restore_bytes(bs, bs), \
+        "a snapshot must not be priced like a KV page run"
+
+
+def test_abort_preempted_state_request_releases_snapshot_slots():
+    """Leak check: aborting a preempted state-family request must release
+    its parked host snapshot slots and device pins — mirrored from the
+    paged abort test, over the StateRunner protocol."""
+    from test_serving import assert_no_block_leaks, assert_no_owner_pin_leaks
+
+    cfg, model, params, bs = _state_model("mamba2-1.3b")
+    rng = np.random.default_rng(9)
+    eng = EchoEngine(model, params, ECHO, num_blocks=8, block_size=bs,
+                     chunk_size=2 * bs, max_pages_per_seq=16,
+                     max_running=2, host_kv_blocks=32)
+    service = EchoService(eng)
+    doc = tuple(int(x) for x in rng.integers(0, cfg.vocab_size, 3 * bs))
+    offs = [service.submit(
+        doc + tuple(int(x) for x in rng.integers(0, cfg.vocab_size, 7)),
+        task_type="offline", max_new_tokens=24) for _ in range(4)]
+    for i in range(3):
+        service.submit(
+            tuple(int(x) for x in rng.integers(0, cfg.vocab_size, 3 * bs)),
+            task_type="online", max_new_tokens=6,
+            slo=SLO(30.0, 5.0), arrival_time=0.0004 * (i + 1))
+    victim = None
+    for _ in range(400):
+        victim = next((h for h in offs
+                       if h.status is HandleStatus.PREEMPTED
+                       and h.request.owner_pins), None)
+        if victim is not None:
+            break
+        if not service.step():
+            break
+    assert victim is not None, "no preemption left owner pins behind"
+    pins = list(victim.request.owner_pins)
+    assert victim.abort()
+    assert victim.request.owner_pins == []
+    for h in pins:
+        bid = eng.bm.hash_to_bid.get(h)
+        if bid is not None:
+            assert eng.bm.blocks[bid].unfinished_owners == 0
+        hb = eng.bm.host.get(h)
+        if hb is not None:
+            assert hb.unfinished_owners == 0
+    assert victim.request.rid not in eng.runner.live, \
+        "abort must drop the live decode state"
+    assert_no_block_leaks(eng)
+    service.run()
+    # the burst leaves stragglers parked behind the online memory reserve;
+    # abort them too — every abort must scrub its pins from BOTH tiers
+    for h in offs:
+        if not h.done:
+            h.abort()
+    service.run()
+    assert all(h.done for h in offs)
+    assert_no_block_leaks(eng)
+    assert_no_owner_pin_leaks(eng)
+
+
+# --------------------------------------------------- byte-term estimators
+def test_fit_swap_mixed_payloads_recovers_link_rate():
+    """KV-page and snapshot transfers land in ONE byte-denominated pool:
+    a fit over their mix recovers the link rate that generated both."""
+    true_byte, true_floor = 1.0 / (20.0 * 1e9), 8e-5
+    samples = []
+    snap = state_spec(83_456).block_bytes_fixed
+    for n_tok in (16, 48, 96, 256):                # paged restores
+        n = n_tok * KV_BYTES_PER_TOKEN_8B
+        samples.append((n, true_byte * n + true_floor))
+    for k in (1, 2, 3, 5):                         # snapshot restores
+        n = k * snap
+        samples.append((n, true_byte * n + true_floor))
+    tm = TimeModel.a100()
+    tm.fit_swap(samples)
+    assert tm.swap_byte == pytest.approx(true_byte, rel=1e-6)
+    assert tm.swap_floor == pytest.approx(true_floor, rel=1e-6)
+    for n, t in samples:
+        assert tm.swap_time(n) == pytest.approx(t, rel=1e-6)
+
+
+def test_perturbed_model_passes_byte_terms_through():
+    base = TimeModel.a100()
+    pm = base.perturbed(scale=2.0)
+    for n in (131_072, 83_456, 7 * KV_BYTES_PER_TOKEN_8B):
+        assert pm.swap_time(n) == pytest.approx(2.0 * base.swap_time(n))
+    assert pm.swap_time(0) == 0.0
+
+
+def test_io_spec_families(tiny_cfg):
+    """io_spec_for_model: attention models price per token, state models
+    one fixed snapshot per block (restore_last_only)."""
+    m = Model(tiny_cfg)
+    io = io_spec_for_model(m)
+    assert io.family == "paged" and not io.restore_last_only
+    assert io.restore_bytes(32, 16) == 32 * io.bytes_per_token
+    for arch in STATE_ARCHS:
+        cfg, model, params, bs = _state_model(arch)
+        sio = io_spec_for_model(model)
+        assert sio.family == "state" and sio.restore_last_only
+        assert sio.block_bytes_fixed == model.cache_bytes(
+            1, 1 if set(cfg.attn_layers) == {"ssm"} else max(cfg.window, 1))
+        assert sio.restore_bytes(8 * bs, bs) == sio.block_bytes_fixed

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import (ECHO, SLO, EchoEngine, Request, TaskType, TimeModel)
+from repro.core.block_io import KV_BYTES_PER_TOKEN_8B
 from repro.core.block_manager import HostBlock, chain_hash
 from repro.core.calibration import OnlineCalibrator
 from repro.core.engine import _SwapStager
@@ -85,15 +86,16 @@ def test_hidden_transfer_rescues_slow_link_only_without_displacement():
     worthwhile once the batch is busy enough to hide it — but only when
     free blocks cover the restore (an eviction-funded restore churns the
     tier and stays priced at link rate)."""
-    # ~6.5e-4 s for 16 tokens: loses to prefill_time((0,16)) ~= 2e-3 floor?
-    # no — make it clearly lose serially but hide under a busy batch
-    tm = TimeModel.a100(swap_tok=4e-4, swap_floor=0.0)
+    # ~4e-4 s per token-equivalent: clearly loses serially to the prefill
+    # floor, but hides under a busy batch
+    tm = TimeModel.a100(swap_byte=4e-4 / KV_BYTES_PER_TOKEN_8B,
+                        swap_floor=0.0)
     eng = EchoEngine(None, None, ECHO, num_blocks=64, block_size=16,
                      time_model=tm, host_kv_blocks=64)
     sched = eng.scheduler
     n = 16
-    assert tm.swap_time(n) > tm.prefill_time([(0, n)]), \
-        "scenario needs a serially-losing transfer"
+    assert tm.swap_time(sched._restore_bytes(n)) > \
+        tm.prefill_time([(0, n)]), "scenario needs a serially-losing transfer"
     busy = _req(range(2048))
     plan = Plan(prefills=[(busy, 1024)])
     assert sched._swap_in_worthwhile(0, n, plan), \
@@ -107,8 +109,8 @@ def test_hidden_transfer_rescues_slow_link_only_without_displacement():
     assert not sched._swap_in_worthwhile(0, n, plan), \
         "an eviction-funded restore must not ride the overlap discount"
     # overlap off: always the serial comparison
-    tm_serial = TimeModel.a100(swap_tok=4e-4, swap_floor=0.0,
-                               swap_overlap=False)
+    tm_serial = TimeModel.a100(swap_byte=4e-4 / KV_BYTES_PER_TOKEN_8B,
+                               swap_floor=0.0, swap_overlap=False)
     eng2 = EchoEngine(None, None, ECHO, num_blocks=64, block_size=16,
                       time_model=tm_serial, host_kv_blocks=64)
     assert not eng2.scheduler._swap_in_worthwhile(0, n, plan)
@@ -374,30 +376,30 @@ def test_rebalance_steals_toward_parked_host_kv():
 # --------------------------------------------------- swap-term calibration
 def test_calibrator_refits_swap_terms_from_staging_times():
     tm = TimeModel.a100()
-    true_tok, true_floor = tm.swap_tok * 2.5, tm.swap_floor
+    true_byte, true_floor = tm.swap_byte * 2.5, tm.swap_floor
     cal = OnlineCalibrator(tm, cooldown=8, min_samples=9)
     rng = np.random.default_rng(0)
     for _ in range(40):
-        n = int(rng.integers(16, 512))
-        cal.observe_swap(n, true_tok * n + true_floor)
+        n = int(rng.integers(16, 512)) * KV_BYTES_PER_TOKEN_8B
+        cal.observe_swap(n, true_byte * n + true_floor)
     assert cal.swap_refits >= 1, "sustained 2.5x swap drift must refit"
-    assert tm.swap_tok == pytest.approx(true_tok, rel=0.05)
+    assert tm.swap_byte == pytest.approx(true_byte, rel=0.05)
     assert cal.n_swap_observed == 40
     # converged: post-refit error stays under the drift threshold
-    n = 256
-    rel = abs(tm.swap_time(n) - (true_tok * n + true_floor)) \
-        / (true_tok * n + true_floor)
+    n = 256 * KV_BYTES_PER_TOKEN_8B
+    rel = abs(tm.swap_time(n) - (true_byte * n + true_floor)) \
+        / (true_byte * n + true_floor)
     assert rel < cal.drift_threshold
 
 
 def test_calibrator_refits_launch_overhead_from_overlap_samples():
     tm = TimeModel.a100(swap_launch=1e-5)
-    true = TimeModel.a100(swap_tok=TimeModel.a100().swap_tok * 3,
+    true = TimeModel.a100(swap_byte=TimeModel.a100().swap_byte * 3,
                           swap_launch=5e-4)       # the real link + launch
     cal = OnlineCalibrator(tm, cooldown=8, min_samples=9)
     rng = np.random.default_rng(1)
     for _ in range(40):
-        n = int(rng.integers(64, 512))
+        n = int(rng.integers(64, 512)) * KV_BYTES_PER_TOKEN_8B
         compute = float(rng.uniform(0.001, 0.02))
         transfer = true.swap_time(n)
         cal.observe_overlap(compute, n,
@@ -406,7 +408,7 @@ def test_calibrator_refits_launch_overhead_from_overlap_samples():
     assert cal.swap_refits >= 1
     # fit order inside refit_swap matters: the PCIe terms converge first,
     # so the overlap residual isolates the launch overhead
-    assert tm.swap_tok == pytest.approx(true.swap_tok, rel=0.05)
+    assert tm.swap_byte == pytest.approx(true.swap_byte, rel=0.05)
     assert tm.swap_launch == pytest.approx(true.swap_launch, rel=0.25)
 
 
@@ -415,7 +417,7 @@ def test_engine_feeds_swap_observations_to_calibrator():
     terms must track the clock without touching the compute coefficients'
     cleanliness (transfer seconds never enter Eq.6-8 samples)."""
     tm = TimeModel.a100()
-    clock = TimeModel.a100(swap_tok=tm.swap_tok * 3)
+    clock = TimeModel.a100(swap_byte=tm.swap_byte * 3)
     cal = OnlineCalibrator(tm, cooldown=3, min_samples=6)
     eng = EchoEngine(None, None, ECHO, num_blocks=64, block_size=16,
                      chunk_size=64, time_model=tm, clock_model=clock,
@@ -427,7 +429,7 @@ def test_engine_feeds_swap_observations_to_calibrator():
     eng.run(max_iters=60_000)
     assert cal.n_swap_observed > 0, "swap traffic must reach the calibrator"
     assert cal.swap_refits >= 1, "3x link drift must trigger a swap refit"
-    assert tm.swap_tok == pytest.approx(clock.swap_tok, rel=0.2)
+    assert tm.swap_byte == pytest.approx(clock.swap_byte, rel=0.2)
 
 
 # --------------------------------------------------- serving live metrics
