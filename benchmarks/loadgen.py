@@ -1,0 +1,256 @@
+"""Real-time load generator: concurrent streaming clients against the
+``AsyncEchoEngine`` front door.
+
+Two traffic shapes:
+
+  * **closed loop** — N clients, each submit -> stream -> repeat; measures
+    the server at its concurrency limit (the ISSUE's 1k-client target);
+  * **open loop** — Poisson arrivals on the wall clock; each arrival is an
+    independent client task, so slow service builds real queueing instead
+    of throttling the generator.
+
+Both report wall-clock TTFT/TPOT percentiles (what a client measures, not
+the backend's virtual clock), request/token throughput, shed/abort counts,
+and two acceptance checks: ``kv_leaks`` after graceful drain (all zero)
+and a replay-equivalence ratio — the same workload, arrival stamps taken
+from the live run, replayed through ``EchoService.drive`` on an
+identically configured engine; engine-domain offline throughput must
+match within 10% (the async loop only adds wall-clock plumbing, never
+scheduling behavior).
+
+CLI: ``python -m benchmarks.loadgen --clients 1000`` (full run),
+``--smoke`` (50 clients, CI), ``--json out.json`` (latency artifact).
+``rows()`` feeds the benchmark harness CSV at smoke scale.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import ECHO, SLO, EchoEngine, Request, TaskType, TimeModel
+from repro.core.simulator import clone_requests
+from repro.serving import AdmissionConfig, EchoService, HandleStatus
+from repro.rt import AsyncEchoEngine
+
+NUM_BLOCKS = 512
+BLOCK_SIZE = 16
+CHUNK = 64
+MAX_BATCH_TOKENS = 4096
+
+
+def _engine() -> EchoEngine:
+    return EchoEngine(None, None, ECHO, num_blocks=NUM_BLOCKS,
+                      block_size=BLOCK_SIZE, chunk_size=CHUNK,
+                      time_model=TimeModel.a100(),
+                      max_batch_tokens=MAX_BATCH_TOKENS)
+
+
+def _prompt(rng: np.random.Generator, mean: int = 32) -> List[int]:
+    n = max(int(rng.normal(mean, mean / 4)), 4)
+    return [int(t) for t in rng.integers(1, 1000, n)]
+
+
+async def _client(rt: AsyncEchoEngine, rng: np.random.Generator, *,
+                  iterations: int, max_new: int, slo: Optional[SLO],
+                  results: List[Dict]) -> None:
+    """One closed-loop client: submit, stream to the end, repeat."""
+    for _ in range(iterations):
+        h = await rt.submit(_prompt(rng), max_new_tokens=max_new, slo=slo)
+        async for _ev in h.tokens():
+            pass
+        results.append({"status": h.status.value,
+                        "ttft": h.wall_ttft(), "tpot": h.wall_tpot(),
+                        "latency": h.wall_latency(),
+                        "tokens": h.n_tokens})
+
+
+async def _open_loop(rt: AsyncEchoEngine, rng: np.random.Generator, *,
+                     rate: float, duration: float, max_new: int,
+                     slo: Optional[SLO], results: List[Dict]) -> None:
+    """Poisson arrivals on the wall clock; one task per arrival."""
+    tasks = []
+    t_end = time.monotonic() + duration
+    while time.monotonic() < t_end:
+        await asyncio.sleep(float(rng.exponential(1.0 / rate)))
+        tasks.append(asyncio.ensure_future(
+            _client(rt, rng, iterations=1, max_new=max_new, slo=slo,
+                    results=results)))
+    await asyncio.gather(*tasks)
+
+
+def _percentiles(vals: List[float]) -> Dict[str, float]:
+    if not vals:
+        return {}
+    arr = np.asarray(vals, np.float64)
+    return {f"p{int(q * 100)}": float(np.percentile(arr, q * 100))
+            for q in (0.5, 0.9, 0.99)}
+
+
+def _replay_ratio(requests: List[Request], live_tput: float) -> float:
+    """Replay the live run's workload (arrival stamps included) through the
+    synchronous ``drive`` path on a fresh identical engine and compare
+    engine-domain offline throughput. ~1.0 means the async front door left
+    the scheduler's behavior untouched."""
+    clones = clone_requests(requests)
+    clones.sort(key=lambda r: r.arrival_time)
+    svc = EchoService(_engine())
+    stats = svc.drive(clones, max_iters=200_000)
+    ref = stats.offline_throughput()
+    if ref <= 0.0:
+        return 1.0 if live_tput <= 0.0 else 0.0
+    return live_tput / ref
+
+
+async def _run(args) -> Dict:
+    rng = np.random.default_rng(args.seed)
+    admission = (AdmissionConfig(max_online_queue=args.max_online_queue)
+                 if args.max_online_queue else None)
+    rt = AsyncEchoEngine(_engine(), admission=admission,
+                         max_submit_queue=max(4 * args.clients, 1024),
+                         steps_per_hop=args.steps_per_hop)
+    reg = rt.instrument()
+    slo = SLO(args.slo_ttft, args.slo_tpot) if args.slo_ttft else None
+    results: List[Dict] = []
+    submitted: List[Request] = []
+    rt.service.events.on_finish(lambda h: submitted.append(h.request))
+    rt.service.events.on_abort(lambda h: submitted.append(h.request))
+
+    # background offline corpus: makes the replay-equivalence check
+    # exercise the co-scheduling path, not just online decode
+    offline_handles = []
+    t0 = time.monotonic()
+    await rt.start()
+    for _ in range(args.offline):
+        offline_handles.append(await rt.submit(
+            _prompt(rng, 96), max_new_tokens=args.max_new * 2,
+            task_type=TaskType.OFFLINE))
+    if args.open_rate > 0:
+        await _open_loop(rt, rng, rate=args.open_rate,
+                         duration=args.duration, max_new=args.max_new,
+                         slo=slo, results=results)
+    else:
+        await asyncio.gather(*[
+            _client(rt, np.random.default_rng(args.seed + 1 + i),
+                    iterations=args.iterations, max_new=args.max_new,
+                    slo=slo, results=results)
+            for i in range(args.clients)])
+    await rt.drain()
+    wall = time.monotonic() - t0
+
+    leaks = rt.kv_leaks()
+    live_tput = rt.service.live.offline_throughput() if args.offline \
+        else rt.service.engine.stats.offline_throughput()
+    ratio = _replay_ratio(submitted, live_tput) if args.replay_check else None
+    offline_finished = 0
+    for h in offline_handles:
+        res = await h.result()
+        offline_finished += res.status is HandleStatus.FINISHED
+    ttfts = [r["ttft"] for r in results if r["ttft"] is not None]
+    tpots = [r["tpot"] for r in results if r["tpot"] is not None]
+    finished = sum(r["status"] == "finished" for r in results)
+    report = {
+        "mode": "open" if args.open_rate > 0 else "closed",
+        "clients": args.clients if args.open_rate <= 0 else None,
+        "open_rate": args.open_rate or None,
+        "requests": len(results),
+        "finished": finished,
+        "shed": sum(r["status"] == "shed" for r in results),
+        "aborted": sum(r["status"] == "aborted" for r in results),
+        "offline_finished": offline_finished,
+        "wall_seconds": wall,
+        "requests_per_s": len(results) / wall if wall > 0 else 0.0,
+        "tokens_per_s": sum(r["tokens"] for r in results) / wall
+        if wall > 0 else 0.0,
+        "ttft_wall": _percentiles(ttfts),
+        "tpot_wall": _percentiles(tpots),
+        "slo_attainment_ttft": rt.service.live.slo_attainment("ttft"),
+        "offline_tput_engine": live_tput,
+        "replay_tput_ratio": ratio,
+        "kv_leaks": leaks,
+        "leak_free": not any(leaks.values()),
+        "peak_live": rt.stats.peak_live,
+        "steps": rt.stats.steps,
+        "slow_consumer_aborts": rt.stats.slow_consumer_aborts,
+        "rt_ttft_p99_hist": reg.get("rt_ttft_wall_seconds").percentile(0.99),
+    }
+    return report
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--clients", type=int, default=1000,
+                   help="closed-loop concurrent clients")
+    p.add_argument("--iterations", type=int, default=2,
+                   help="requests per closed-loop client")
+    p.add_argument("--open-rate", type=float, default=0.0,
+                   help="open-loop Poisson arrivals/s (overrides closed loop)")
+    p.add_argument("--duration", type=float, default=10.0,
+                   help="open-loop generation window, wall seconds")
+    p.add_argument("--max-new", type=int, default=8)
+    p.add_argument("--offline", type=int, default=16,
+                   help="background offline requests submitted at start")
+    p.add_argument("--slo-ttft", type=float, default=2.0)
+    p.add_argument("--slo-tpot", type=float, default=0.5)
+    p.add_argument("--max-online-queue", type=int, default=0,
+                   help="admission queue cap (0 = admission off)")
+    p.add_argument("--steps-per-hop", type=int, default=8,
+                   help="backend iterations per worker-thread round trip")
+    p.add_argument("--no-replay-check", dest="replay_check",
+                   action="store_false",
+                   help="skip the drive() replay-equivalence comparison")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI scale: 50 clients x 1 request")
+    p.add_argument("--json", type=str, default=None,
+                   help="write the full report to this path")
+    p.add_argument("--seed", type=int, default=0)
+    return p
+
+
+def main(argv=None) -> int:
+    args = _parser().parse_args(argv)
+    if args.smoke:
+        args.clients = min(args.clients, 50)
+        args.iterations = 1
+        args.offline = min(args.offline, 8)
+    report = asyncio.run(_run(args))
+    for key in ("mode", "requests", "finished", "shed", "aborted",
+                "wall_seconds", "requests_per_s", "tokens_per_s",
+                "ttft_wall", "tpot_wall", "replay_tput_ratio",
+                "leak_free", "peak_live"):
+        print(f"{key}: {report[key]}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.json}")
+    ok = report["leak_free"] and (
+        report["replay_tput_ratio"] is None
+        or abs(report["replay_tput_ratio"] - 1.0) <= 0.10)
+    return 0 if ok else 1
+
+
+# ----------------------------------------------------------- harness rows
+def rows():
+    """Benchmark-harness entry: a smoke-scale closed-loop run."""
+    args = _parser().parse_args([])
+    args.clients, args.iterations, args.offline = 50, 1, 8
+    t0 = time.perf_counter()
+    report = asyncio.run(_run(args))
+    wall_us = (time.perf_counter() - t0) * 1e6
+    out = [("loadgen.closed50.requests_per_s", wall_us,
+            f"{report['requests_per_s']:.0f}"),
+           ("loadgen.closed50.ttft_p99_ms", wall_us,
+            f"{report['ttft_wall'].get('p99', 0.0) * 1e3:.2f}"),
+           ("loadgen.closed50.replay_ratio", wall_us,
+            f"{report['replay_tput_ratio']:.3f}"),
+           ("loadgen.closed50.leak_free", wall_us,
+            str(report["leak_free"]).lower())]
+    return out
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -28,7 +28,7 @@ def _section(name, fn, rows_out):
 def main() -> None:
     from benchmarks import (ablations, calibration, capacity, cluster,
                             estimator_accuracy)
-    from benchmarks import figures, kernels_micro, kv_swap, roofline
+    from benchmarks import figures, kernels_micro, kv_swap, loadgen, roofline
 
     rows = []
     _section("fig6", figures.fig6_throughput_speedup, rows)
@@ -44,6 +44,7 @@ def main() -> None:
     _section("cluster", cluster.rows, rows)
     _section("kernels", kernels_micro.rows, rows)
     _section("ablations", ablations.rows, rows)
+    _section("loadgen", loadgen.rows, rows)
     _section("roofline", roofline.rows, rows)
 
     print("name,us_per_call,derived")

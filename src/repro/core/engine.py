@@ -377,6 +377,11 @@ class EchoEngine:
         self.pending: List[Request] = []       # (arrival_time, rid) ordered
         self.listeners: List[EngineListener] = []
         self._rng = np.random.default_rng(seed)
+        # step() is not reentrant and not thread-safe: the real-time layer
+        # drives it from a worker thread (asyncio.to_thread), so a second
+        # concurrent driver must fail loudly instead of corrupting the
+        # scheduler/KV state mid-iteration
+        self._step_lock = threading.Lock()
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
@@ -579,8 +584,34 @@ class EchoEngine:
         if total_bytes and getattr(self.tm, "swap_overlap", False):
             cal.observe_overlap(compute_time, total_bytes, iter_time)
 
+    def next_arrival_time(self) -> Optional[float]:
+        """Earliest pending arrival (engine-clock domain), or None. The
+        real-time loop uses it to sleep precisely while idle instead of
+        spinning on ``step``."""
+        return self.pending[0].arrival_time if self.pending else None
+
+    def flush_swaps(self) -> None:
+        """Land every in-flight host<->device staging transfer. ``run``
+        calls this before going idle; the real-time layer calls it during
+        graceful drain so no swap payload is lost when the loop stops."""
+        if self._stager is not None:
+            self._stager.flush()
+
     # ------------------------------------------------------------- step
     def step(self) -> Optional[IterationRecord]:
+        """One scheduler+execute iteration. Serialized: a second driver
+        entering while an iteration is mid-flight (the RT loop's worker
+        thread vs. a direct caller) raises instead of interleaving."""
+        if not self._step_lock.acquire(blocking=False):
+            raise RuntimeError(
+                "EchoEngine.step() re-entered while an iteration is in "
+                "flight — the engine must have exactly one driver")
+        try:
+            return self._step_impl()
+        finally:
+            self._step_lock.release()
+
+    def _step_impl(self) -> Optional[IterationRecord]:
         self._pull_arrivals()
         tsched = time.perf_counter()
         plan = self.scheduler.schedule(self.now)
@@ -805,6 +836,5 @@ class EchoEngine:
                     break
             else:
                 stalls = 0
-        if self._stager is not None:
-            self._stager.flush()       # land in-flight payloads before idle
+        self.flush_swaps()             # land in-flight payloads before idle
         return self.stats

@@ -34,6 +34,17 @@ bandwidth, ``--no-swap`` forces the recompute-only baseline, and
 them with compute on the async copy stream:
 
   PYTHONPATH=src python -m repro.launch.serve --host-kv-gb 4 --pcie-gbps 25
+
+Real-time serving: ``--serve`` listens on a TCP socket instead of replaying
+a canned trace — the ``repro.rt`` asyncio front door (continuous-batching
+loop, wall-clock admission, streaming handles, graceful drain on Ctrl-C).
+At startup the PCIe swap terms are refit from real ``jax.device_put``
+timings (skip with ``--no-link-calibration``); ``--virtual`` serves the
+model-free virtual-clock engine for protocol demos:
+
+  PYTHONPATH=src python -m repro.launch.serve --serve --port 8631
+  PYTHONPATH=src python -m repro.launch.serve --serve --virtual \
+      --max-online-queue 64
 """
 from __future__ import annotations
 
@@ -263,6 +274,88 @@ def serve_cluster(args) -> None:
     write_obs(args, tracer, registry)
 
 
+def serve_realtime(args) -> None:
+    """--serve: put the ``repro.rt`` TCP front door over the engine (or a
+    model-free cluster with --replicas>1) and listen until SIGINT/SIGTERM,
+    then drain gracefully and report."""
+    import asyncio
+    import signal
+
+    from repro.rt import AsyncEchoEngine, EchoServer
+    from repro.rt.calibrate import calibrate_link
+
+    policy = resolve_policy(args)
+    swap_byte = TimeModel.pcie_swap_byte(args.pcie_gbps)
+    quad, io, model, params = True, None, None, None
+    if args.replicas == 1 and not args.virtual:
+        cfg = get_config(args.arch or DEFAULT_ARCH).reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(args.seed))
+        quad = cfg.family not in ("ssm", "hybrid")
+        io = io_spec_for_model(model)
+    tm = TimeModel.a100(quadratic_prefill=quad, swap_byte=swap_byte,
+                        swap_overlap=not args.no_swap_overlap)
+    # cold-start link calibration: measure the real host<->device path and
+    # refit the swap terms BEFORE the first request is priced against them
+    if not args.no_link_calibration:
+        print(calibrate_link(tm).summary())
+    if args.replicas > 1:
+        from repro.cluster import ClusterSimulator
+        target = ClusterSimulator(args.replicas, policy,
+                                  router_policy=args.router,
+                                  num_blocks=args.num_blocks, time_model=tm,
+                                  host_kv_blocks=host_kv_blocks(args),
+                                  seed=args.seed)
+    else:
+        target = EchoEngine(model, params, policy,
+                            num_blocks=args.num_blocks, block_size=16,
+                            chunk_size=64, max_pages_per_seq=32,
+                            time_model=tm,
+                            host_kv_blocks=host_kv_blocks(args, io))
+    rt = AsyncEchoEngine(target, admission=admission_config(args))
+    tracer, registry = None, None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import MetricsRegistry, Tracer
+        tracer = Tracer(cap=args.trace_cap) if args.trace_out else None
+        registry = rt.instrument(MetricsRegistry(), tracer)
+
+    async def _serve() -> None:
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            try:
+                loop.add_signal_handler(sig, stop.set)
+            except NotImplementedError:      # non-unix event loops
+                pass
+        await rt.start()
+        srv = await EchoServer(rt, host=args.host, port=args.port).start()
+        host, port = srv.address
+        mode = (f"{args.replicas} virtual replicas" if args.replicas > 1
+                else ("virtual engine" if model is None
+                      else f"{(args.arch or DEFAULT_ARCH)} (reduced)"))
+        print(f"listening on {host}:{port} — {mode}, policy={policy.name}; "
+              "newline-delimited JSON, Ctrl-C to drain")
+        if args.serve_duration > 0:
+            try:
+                await asyncio.wait_for(stop.wait(), args.serve_duration)
+            except asyncio.TimeoutError:
+                pass
+        else:
+            await stop.wait()
+        print("draining (in-flight work finishes, new submits shed)...")
+        await srv.close()
+        print(f"served {srv.requests_served} requests over "
+              f"{srv.connections} connections; "
+              f"stats: finished={rt.stats.finished} shed={rt.stats.shed} "
+              f"aborted={rt.stats.aborted} steps={rt.stats.steps}")
+        leaks = rt.kv_leaks()
+        print("kv leaks after drain: "
+              + ("none" if not any(leaks.values()) else str(leaks)))
+
+    asyncio.run(_serve())
+    write_obs(args, tracer, registry)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default=None,
@@ -333,7 +426,29 @@ def main() -> None:
     ap.add_argument("--trace-cap", type=int, default=200_000,
                     help="trace ring-buffer capacity in events; oldest "
                          "events drop beyond it (bounded memory)")
+    ap.add_argument("--serve", action="store_true",
+                    help="listen on a TCP socket (repro.rt front door) "
+                         "instead of replaying a canned trace; drains "
+                         "gracefully on Ctrl-C")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="--serve bind address")
+    ap.add_argument("--port", type=int, default=8631,
+                    help="--serve bind port (0 = ephemeral)")
+    ap.add_argument("--virtual", action="store_true",
+                    help="--serve the model-free virtual-clock engine "
+                         "(protocol/scheduling demos; no jax compute)")
+    ap.add_argument("--no-link-calibration", action="store_true",
+                    help="skip the cold-start PCIe micro-benchmark that "
+                         "refits the swap terms from real jax.device_put "
+                         "timings before traffic is admitted")
+    ap.add_argument("--serve-duration", type=float, default=0.0,
+                    help="auto-drain the --serve listener after this many "
+                         "wall seconds (0 = run until signal)")
     args = ap.parse_args()
+
+    if args.serve:
+        serve_realtime(args)
+        return
 
     if args.replicas > 1:
         if args.arch is not None:

@@ -232,6 +232,83 @@ class EngineProbe(EngineListener):
                     0.0))
 
 
+class RTProbe:
+    """Wall-clock serving metrics for the real-time front door.
+
+    Everything the engine-side probes record lives in the backend's clock
+    domain; this probe records what a *client* experiences — wall seconds
+    from submit to first token (``rt_ttft_wall_seconds``) and per token
+    after it — via ``AsyncEchoEngine.on_request_done``, which fires on the
+    event-loop thread at every handle's terminal transition. With a tracer
+    it draws one span per connection at ``RT_PID`` (serving-clock
+    timeline): submit-to-terminal, first-token instant inside it.
+
+    Duck-typed against the engine (``on_request_done``/``stats``/
+    ``live_requests``) for the same import-discipline reason as the bus:
+    ``repro.rt`` imports ``repro.serving`` which imports this package.
+    """
+
+    def __init__(self, rt, registry: MetricsRegistry, tracer=None):
+        self.rt = rt
+        self.tracer = tracer
+        r = registry
+        self.ttft_wall = r.histogram(
+            "rt_ttft_wall_seconds", "serving-clock time to first token",
+            buckets=LATENCY_BUCKETS)
+        self.tpot_wall = r.histogram(
+            "rt_tpot_wall_seconds", "serving-clock time per output token",
+            buckets=LATENCY_BUCKETS)
+        self.latency_wall = r.histogram(
+            "rt_request_wall_seconds", "serving-clock submit-to-terminal "
+            "latency", buckets=LATENCY_BUCKETS)
+        done = r.counter("rt_requests_total",
+                         "terminal real-time requests", ("status",))
+        self._done = {s: done.labels(s)
+                      for s in ("finished", "aborted", "shed")}
+        self._live = r.gauge("rt_live_requests",
+                             "handles between submit and terminal")
+        self._slow = r.gauge("rt_slow_consumer_aborts",
+                             "token-queue-cap aborts so far")
+        if tracer is not None:
+            from repro.obs.trace import RT_PID
+            self._rt_pid = RT_PID
+            tracer.set_process(RT_PID, "rt frontdoor")
+        rt.on_request_done(self._on_done)
+
+    def _on_done(self, handle) -> None:
+        status = handle.status.value
+        self._done.get(status, self._done["aborted"]).inc()
+        lat = handle.wall_latency()
+        if lat is not None:
+            self.latency_wall.observe(lat)
+        ttft, tpot = handle.wall_ttft(), handle.wall_tpot()
+        if ttft is not None:
+            self.ttft_wall.observe(ttft)
+        if tpot is not None:
+            self.tpot_wall.observe(tpot)
+        self._live.set(self.rt.live_requests())
+        self._slow.set(self.rt.stats.slow_consumer_aborts)
+        if self.tracer is not None:
+            from repro.obs.trace import TID_REQ_BASE
+            tid = TID_REQ_BASE + handle.rid
+            self.tracer.set_thread(self._rt_pid, tid, f"conn r{handle.rid}")
+            self.tracer.span(
+                self._rt_pid, tid, f"r{handle.rid} {status}",
+                handle.t_submit_wall, lat or 0.0,
+                args={"tokens": handle.n_tokens,
+                      "ttft_wall": ttft, "tpot_wall": tpot})
+            if handle.t_first_token_wall is not None:
+                self.tracer.instant(self._rt_pid, tid, "first_token",
+                                    handle.t_first_token_wall)
+
+
+def instrument_rt(rt, registry: MetricsRegistry, tracer=None) -> RTProbe:
+    """Attach the wall-clock front-door probe to an ``AsyncEchoEngine``
+    (the service-level probes are attached separately by
+    ``AsyncEchoEngine.instrument``)."""
+    return RTProbe(rt, registry, tracer)
+
+
 # ----------------------------------------------------------------- wiring
 def instrument_engine(engine: EchoEngine, registry: MetricsRegistry,
                       tracer=None, *, replica: int = 0) -> EngineProbe:

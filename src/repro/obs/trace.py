@@ -14,6 +14,9 @@ Track layout (one Perfetto "process" per replica):
     tid 3      swap copy-stream — PCIe transfer spans + swap-out instants
     tid 16+rid one track per request: queued span, prefill chunk spans,
                decode spans, preempt/swap-in instants, parked spans
+  pid 9997     rt frontdoor   — per-connection wall-clock spans (submit to
+               terminal, first-token instant); NOTE this pid's timeline is
+               the *serving* clock, the engine pids' is the backend clock
   pid 9998     service        — admission shed/abort instants
   pid 9999     router         — cluster dispatch/steal instants
 
@@ -36,6 +39,7 @@ TID_SCHEDULE = 1
 TID_KERNEL = 2
 TID_SWAP = 3
 TID_REQ_BASE = 16          # request track = TID_REQ_BASE + rid
+RT_PID = 9997
 SERVICE_PID = 9998
 ROUTER_PID = 9999
 

@@ -1,0 +1,24 @@
+"""Real-time serving layer: the asyncio front door over ``EchoService``.
+
+``AsyncEchoEngine`` runs the continuous-batching loop as a background
+task (``engine.step`` off-thread), stamps live arrivals with real times
+for wall-clock admission, streams tokens to ``AsyncRequestHandle``
+consumers, and drains gracefully. ``EchoServer`` puts a
+newline-delimited-JSON TCP socket in front of it; ``calibrate_link``
+refits the ``TimeModel``'s PCIe terms from real ``jax.device_put``
+timings at cold start.
+"""
+from repro.rt.calibrate import (LinkCalibration, calibrate_link,
+                                measure_link, measure_overlap)
+from repro.rt.clock import ManualClock, WallClock
+from repro.rt.engine_loop import AsyncEchoEngine, RTState, RTStats
+from repro.rt.handle import (AsyncRequestHandle, AsyncTokenEvent,
+                             SubmitQueueFull)
+from repro.rt.server import EchoServer, request_once
+
+__all__ = [
+    "AsyncEchoEngine", "AsyncRequestHandle", "AsyncTokenEvent",
+    "EchoServer", "LinkCalibration", "ManualClock", "RTState", "RTStats",
+    "SubmitQueueFull", "WallClock", "calibrate_link", "measure_link",
+    "measure_overlap", "request_once",
+]

@@ -68,6 +68,10 @@ class EngineBackend:
         return self.engine.run(max_iters or self.default_max_iters,
                                until_time=until_time)
 
+    def flush(self) -> None:
+        """Land in-flight swap staging (graceful-drain hook)."""
+        self.engine.flush_swaps()
+
     def stats(self):
         return self.engine.stats
 
@@ -131,6 +135,10 @@ class ClusterBackend:
                    until_time: Optional[float] = None):
         return self.sim.run(max_iters or self.default_max_iters,
                             until_time=until_time)
+
+    def flush(self) -> None:
+        for eng in self.engines():
+            eng.flush_swaps()
 
     def stats(self):
         return self.sim.stats()

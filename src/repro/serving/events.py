@@ -10,6 +10,7 @@ finished counts) incrementally from events, matching the post-hoc
 from __future__ import annotations
 
 import logging
+import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
@@ -48,7 +49,14 @@ class EventBus:
     """Named-event subscriptions. ``token``/``first_token`` callbacks get a
     ``TokenEvent``; ``finish``/``preempt``/``abort``/``shed``/``requeue``
     callbacks get the ``RequestHandle``; ``swap_in``/``swap_out`` get a
-    ``SwapEvent``. Callbacks run synchronously at iteration end."""
+    ``SwapEvent``. Callbacks run synchronously at iteration end.
+
+    Emission is serialized under one re-entrant lock: the real-time layer
+    drives ``engine.step`` on a worker thread while the event loop thread
+    sheds/aborts through the same service, so two threads can reach
+    ``emit`` concurrently. The lock makes every subscriber — LiveMetrics
+    above all — single-threaded by construction (callbacks may re-emit;
+    hence re-entrant)."""
 
     EVENTS = ("token", "first_token", "finish", "preempt", "abort", "shed",
               "requeue", "swap_in", "swap_out", "swap_overlap")
@@ -59,16 +67,19 @@ class EventBus:
         # emit() swallows the exception, counts it here, and keeps going
         self.dropped_callbacks = 0
         self._warned: set = set()
+        self._lock = threading.RLock()
 
     def subscribe(self, event: str, cb: Callable) -> Callable:
         if event not in self._subs:
             raise ValueError(f"unknown event {event!r}; "
                              f"expected one of {self.EVENTS}")
-        self._subs[event].append(cb)
+        with self._lock:
+            self._subs[event].append(cb)
         return cb                      # decorator-friendly
 
     def unsubscribe(self, event: str, cb: Callable) -> None:
-        self._subs[event].remove(cb)
+        with self._lock:
+            self._subs[event].remove(cb)
 
     # convenience decorators / registrars --------------------------------
     def on_token(self, cb: Callable[[TokenEvent], None]) -> Callable:
@@ -106,17 +117,18 @@ class EventBus:
 
     # emission ------------------------------------------------------------
     def emit(self, event: str, payload) -> None:
-        for cb in list(self._subs[event]):
-            try:
-                cb(payload)
-            except Exception:
-                self.dropped_callbacks += 1
-                key = (event, cb)
-                if key not in self._warned:   # log once per (event, cb)
-                    self._warned.add(key)
-                    logger.warning("subscriber %r raised on %r; suppressing"
-                                   " further warnings for this pair",
-                                   cb, event, exc_info=True)
+        with self._lock:
+            for cb in list(self._subs[event]):
+                try:
+                    cb(payload)
+                except Exception:
+                    self.dropped_callbacks += 1
+                    key = (event, cb)
+                    if key not in self._warned:   # log once per (event, cb)
+                        self._warned.add(key)
+                        logger.warning("subscriber %r raised on %r; "
+                                       "suppressing further warnings for "
+                                       "this pair", cb, event, exc_info=True)
 
 
 class LiveMetrics:
@@ -125,7 +137,11 @@ class LiveMetrics:
     Attainment follows ``EngineStats.slo_attainment`` exactly: only
     *decidable* finished online requests enter the denominator (ttft needs a
     first token; tpot needs >= 2 output tokens), so at end of run the live
-    numbers equal the post-hoc scrape."""
+    numbers equal the post-hoc scrape.
+
+    Thread-safety: every handler runs inside ``EventBus.emit``'s lock, so
+    the counters stay exact even when the off-thread step loop and the
+    event-loop thread emit concurrently — no locking needed here."""
 
     def __init__(self, bus: EventBus):
         self.online_tokens = 0

@@ -228,6 +228,16 @@ class EchoService:
     def stats(self):
         return self.backend.stats()
 
+    def pending_frontdoor(self) -> int:
+        """Requests held at the front door, not yet visible to the backend:
+        future arrivals awaiting their admission verdict plus offline work
+        parked in the admission overflow queue. The real-time drain loop
+        treats these as outstanding work."""
+        n = len(self._held)
+        if self.admission is not None:
+            n += len(self.admission.deferred)
+        return n
+
     # ------------------------------------------------------------- obs
     def instrument(self, registry=None, tracer=None):
         """Attach the observability layer (``repro.obs``): the bus-level
