@@ -25,7 +25,8 @@ import sys
 
 TPUT_KEY = "offline_throughput"
 SLO_KEYS = ("slo_ttft", "slo_tpot")
-BOOL_GATES = ("swap_wins", "overlap_wins", "state_swap_wins")
+BOOL_GATES = ("swap_wins", "overlap_wins", "state_swap_wins",
+              "recovery_ok", "migration_wins", "autoscale_ok")
 
 
 def check(current: dict, baseline: dict, tolerance: float,

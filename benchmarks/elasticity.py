@@ -1,0 +1,355 @@
+"""Elastic-fleet benchmark: failure recovery, migrate-on-drain vs
+recompute, and predictive autoscaling vs static over-provisioning.
+
+Three paired experiments on the shared §7.1 scenario, each deterministic on
+the virtual clock (same seeds + ``clone_requests(preserve_rid=True)`` make
+the paired runs bit-comparable):
+
+  recovery   — kill one replica mid-backlog (ChaosConfig) and compare the
+               dead replica's re-dispatched online requests against the
+               same rids in an identical no-chaos run. Gate: >= 95% of them
+               finish, at >= 95% of their no-chaos SLO attainment.
+  migration  — drain the busiest replica mid-run twice: once shipping its
+               parked prefixes over the fabric (``migrate=True``), once
+               recomputing them at the new home. Gate: migration must not
+               lose offline throughput at equal-or-better SLO attainment.
+  autoscale  — FleetController (RatePredictor sizing, FleetPlanner.probe
+               capacity oracle) growing/shrinking from 1 replica vs a
+               static fleet pinned at ``max_replicas``. Gate: SLO within 2
+               points absolute of the static fleet with strictly fewer
+               replica-seconds.
+
+Standalone JSON mode (CI artifact + the bench-floor regression gate —
+compare against benchmarks/baselines/elasticity.json via check_floor.py):
+    PYTHONPATH=src:. python benchmarks/elasticity.py --json out.json
+Tiny smoke mode (CI):
+    PYTHONPATH=src:. python benchmarks/elasticity.py --smoke
+"""
+from __future__ import annotations
+
+from benchmarks.scenario import build_scenario
+from repro.cluster import ChaosConfig, ClusterSimulator, FleetController, \
+    FleetPlanner
+from repro.core import ECHO
+from repro.core.simulator import clone_requests
+
+SEED = 0
+N_REPLICAS = 3
+NUM_BLOCKS = 96           # per replica: fleet working set >> one cache
+HOST_BLOCKS = 192         # host tier holds the prefixes a drain ships
+
+# saturated co-serve: the offline corpus takes most of the run to clear,
+# so a kill strands in-flight work and a drain still has queued offline
+# requests (with parked prefixes) to re-home
+SCENARIO = dict(duration=24.0, online_rate=7.0, burst_rate=14.0,
+                burst_prob=0.08, online_new=48, n_docs=8, questions=96,
+                num_blocks=NUM_BLOCKS)
+SMOKE = dict(duration=8.0, online_rate=4.0, n_docs=3, questions=12,
+             max_iters=6_000)
+
+KILL_FRAC = 0.30          # kill this far into the run (burst + backlog up)
+DRAIN_FRAC = 0.25         # drain the busiest replica this far into the run
+
+# prefill-heavy offline (long shared docs, short answers) under steady
+# online: re-homing a group costs one 640-token re-prefill without
+# migration vs a ~5 ms fabric shipment with it — the regime where
+# migrate-on-drain is first-order, not scheduling noise
+MIG_SCENARIO = dict(duration=24.0, online_rate=5.0, burst_prob=0.0,
+                    online_new=32, n_docs=16, questions=24, doc_len=640,
+                    offline_new=8, num_blocks=NUM_BLOCKS)
+MIG_SMOKE = dict(duration=8.0, online_rate=3.0, n_docs=6, questions=8,
+                 max_iters=6_000)
+MIG_HOST_BLOCKS = 256     # room to park every homed group's prefix
+
+AUTO_MAX = 3              # static fleet size the autoscaler competes with
+AUTO_SCENARIO = dict(duration=40.0, online_rate=2.0, burst_rate=12.0,
+                     burst_len=6.0, burst_prob=0.10, n_docs=3, questions=12,
+                     num_blocks=NUM_BLOCKS)
+AUTO_SMOKE = dict(duration=12.0, questions=8, max_iters=6_000)
+
+
+def _scenario(smoke: bool, base: dict, smoke_ov: dict):
+    ov = dict(base)
+    if smoke:
+        ov.update(smoke_ov)
+    max_iters = ov.pop("max_iters", 60_000)
+    num_blocks = ov.pop("num_blocks", NUM_BLOCKS)
+    tm, online, offline, p = build_scenario(seed=SEED, **ov)
+    return tm, online, offline, p, num_blocks, max_iters
+
+
+def _sim(tm, num_blocks, n_replicas=N_REPLICAS, host_blocks=HOST_BLOCKS,
+         **kw):
+    return ClusterSimulator(n_replicas, ECHO, num_blocks=num_blocks,
+                            host_kv_blocks=host_blocks, time_model=tm,
+                            seed=SEED, **kw)
+
+
+def _submit(sim, online, offline):
+    sim.submit_all(clone_requests(online, preserve_rid=True)
+                   + clone_requests(offline, preserve_rid=True))
+
+
+def _meets_slo(r) -> bool:
+    if not r.slo:
+        return True
+    ttft, tpot = r.ttft(), r.tpot()
+    return (ttft is None or ttft <= r.slo.ttft) and \
+        (tpot is None or tpot <= r.slo.tpot)
+
+
+def _mode_report(sim, stats):
+    return {
+        "offline_throughput": stats.offline_throughput(),
+        "slo_ttft": stats.slo_attainment("ttft"),
+        "slo_tpot": stats.slo_attainment("tpot"),
+        "online_finished": stats.finished_counts()[0],
+        "offline_finished": stats.finished_counts()[1],
+        "replica_seconds": stats.replica_seconds,
+        "migrations": stats.router.migrations,
+        "migrated_blocks": stats.router.migrated_blocks,
+        "migrated_bytes": stats.router.migrated_bytes,
+        "redispatched_online": stats.redispatched_online,
+        "redispatched_offline": stats.redispatched_offline,
+        "lost_tokens": stats.lost_tokens,
+    }
+
+
+# --------------------------------------------------------------- recovery
+def recovery(smoke: bool = False) -> dict:
+    tm, online, offline, p, nb, max_iters = _scenario(smoke, SCENARIO, SMOKE)
+    horizon = p["duration"] * 6
+    kill_t = p["duration"] * KILL_FRAC
+
+    # deterministic victim choice: replay to the kill instant once and take
+    # the replica with online work in flight and the deepest offline
+    # backlog — the worst replica to lose
+    probe = _sim(tm, nb)
+    _submit(probe, online, offline)
+    probe.run(max_iters=max_iters, until_time=kill_t)
+
+    def _onl(r):
+        return sum(1 for q in r.inflight_requests(include_running=True)
+                   if q.is_online)
+
+    victim = max(probe.replicas,
+                 key=lambda r: (_onl(r) > 0, r.offline_backlog(),
+                                _onl(r), -r.id))
+
+    base = _sim(tm, nb)
+    _submit(base, online, offline)
+    base_stats = base.run(max_iters=max_iters, until_time=horizon)
+
+    sim = _sim(tm, nb, chaos=ChaosConfig(kills=[(kill_t, victim.id)]))
+    _submit(sim, online, offline)
+    stats = sim.run(max_iters=max_iters, until_time=horizon)
+
+    online_rids = {r.rid for r in online}
+    redis = [rid for k in stats.kills for rid in k.rids
+             if rid in online_rids]
+    fin_chaos = {r.rid: r for r in stats.merged().finished}
+    fin_base = {r.rid: r for r in base_stats.merged().finished}
+    recovered = [rid for rid in redis if rid in fin_chaos]
+    slo_chaos = sum(_meets_slo(fin_chaos[rid]) for rid in recovered)
+    slo_base = sum(rid in fin_base and _meets_slo(fin_base[rid])
+                   for rid in redis)
+    n = max(len(redis), 1)
+    lat = stats.recovery_latencies()
+
+    out = {"no_chaos": _mode_report(base, base_stats),
+           "chaos_kill": _mode_report(sim, stats)}
+    head = {
+        "kill_t": kill_t,
+        "redispatched_online": len(redis),
+        "recovered_frac": len(recovered) / n,
+        "recovered_slo_frac": slo_chaos / n,
+        "baseline_slo_frac": slo_base / n,
+        "worst_recovery_s": max(lat, default=0.0),
+        # acceptance gate (a): the kill's re-dispatch must recover >= 95%
+        # of the dead replica's unfinished online requests, within SLO
+        # relative to the same rids in the no-chaos run
+        "recovery_ok": bool(
+            len(redis) > 0
+            and len(recovered) >= 0.95 * len(redis)
+            and slo_chaos >= 0.95 * slo_base - 1e-9),
+    }
+    return out, head
+
+
+# -------------------------------------------------------------- migration
+def migration(smoke: bool = False) -> dict:
+    tm, online, offline, p, nb, max_iters = _scenario(smoke, MIG_SCENARIO,
+                                                      MIG_SMOKE)
+    horizon = p["duration"] * 6
+    drain_t = p["duration"] * DRAIN_FRAC
+
+    out = {}
+    for mode, migrate in (("drain_migrate", True),
+                          ("drain_recompute", False)):
+        sim = _sim(tm, nb, host_blocks=MIG_HOST_BLOCKS, migrate=migrate)
+        _submit(sim, online, offline)
+        sim.run(max_iters=max_iters, until_time=drain_t)
+        victim = max(sim.router.routable(),
+                     key=lambda r: (r.offline_backlog(), -r.id))
+        drained = sim.drain_replica(victim.id)
+        stats = sim.run(max_iters=max_iters, until_time=horizon)
+        rep = _mode_report(sim, stats)
+        rep["drained_replica"] = victim.id if drained else None
+        out[mode] = rep
+
+    mig, rec = out["drain_migrate"], out["drain_recompute"]
+    head = {
+        "migration_tput_ratio": mig["offline_throughput"]
+        / max(rec["offline_throughput"], 1e-9),
+        "migration_slo_delta_ttft": mig["slo_ttft"] - rec["slo_ttft"],
+        "migration_slo_delta_tpot": mig["slo_tpot"] - rec["slo_tpot"],
+        # acceptance gate (b): shipping parked prefixes over the fabric
+        # must beat recomputing them at the new home on offline throughput,
+        # at equal-or-better SLO attainment
+        "migration_wins": bool(
+            mig["offline_throughput"] >= rec["offline_throughput"]
+            and mig["slo_ttft"] >= rec["slo_ttft"] - 1e-9
+            and mig["slo_tpot"] >= rec["slo_tpot"] - 1e-9),
+    }
+    return out, head
+
+
+# -------------------------------------------------------------- autoscale
+def autoscale(smoke: bool = False) -> dict:
+    tm, online, offline, p, nb, max_iters = _scenario(smoke, AUTO_SCENARIO,
+                                                      AUTO_SMOKE)
+    horizon = p["duration"] * 6
+
+    static = _sim(tm, nb, n_replicas=AUTO_MAX)
+    _submit(static, online, offline)
+    static_stats = static.run(max_iters=max_iters, until_time=horizon)
+
+    ctrl = FleetController(min_replicas=1, max_replicas=AUTO_MAX,
+                           interval=1.0, cooldown=2.0, queue_high=2,
+                           bin_s=2.0)
+    # capacity figure from the planner's sweep oracle (§5.4 run once
+    # offline), not a hand-tuned constant
+    ctrl.calibrate(FleetPlanner(tm, seed=SEED), online,
+                   num_blocks=nb, duration=p["duration"] * 2)
+    auto = _sim(tm, nb, n_replicas=1, autoscaler=ctrl, join_delay=0.5)
+    _submit(auto, online, offline)
+    auto_stats = auto.run(max_iters=max_iters, until_time=horizon)
+
+    out = {"static": _mode_report(static, static_stats),
+           "autoscale": _mode_report(auto, auto_stats)}
+    rs_auto = auto_stats.replica_seconds
+    rs_static = static_stats.replica_seconds
+    head = {
+        "rate_per_replica": ctrl.rate_per_replica,
+        "replicas_added": ctrl.n_added,
+        "replicas_drained": ctrl.n_drained,
+        "replica_seconds_ratio": rs_auto / max(rs_static, 1e-9),
+        "autoscale_slo_delta_ttft": out["autoscale"]["slo_ttft"]
+        - out["static"]["slo_ttft"],
+        "autoscale_slo_delta_tpot": out["autoscale"]["slo_tpot"]
+        - out["static"]["slo_tpot"],
+        # acceptance gate (c): the autoscaled fleet must hold SLO within 2
+        # points absolute of the statically over-provisioned fleet while
+        # spending strictly fewer replica-seconds
+        "autoscale_ok": bool(
+            out["autoscale"]["slo_ttft"]
+            >= out["static"]["slo_ttft"] - 0.02
+            and out["autoscale"]["slo_tpot"]
+            >= out["static"]["slo_tpot"] - 0.02
+            and rs_auto < rs_static),
+    }
+    return out, head
+
+
+MODES = ("no_chaos", "chaos_kill", "drain_migrate", "drain_recompute",
+         "static", "autoscale")
+
+
+def results(smoke: bool = False) -> dict:
+    out = {}
+    head = {}
+    for fn in (recovery, migration, autoscale):
+        modes, h = fn(smoke)
+        out.update(modes)
+        head.update(h)
+    out["headline"] = head
+    return out
+
+
+def rows():
+    res = results()
+    out = []
+    for mode in MODES:
+        r = res[mode]
+        out.append((f"elasticity.{mode}.offline_tput", 0.0,
+                    f"{r['offline_throughput']:.1f}"))
+        out.append((f"elasticity.{mode}.slo_ttft", 0.0,
+                    f"{r['slo_ttft']:.3f}"))
+        out.append((f"elasticity.{mode}.slo_tpot", 0.0,
+                    f"{r['slo_tpot']:.3f}"))
+    h = res["headline"]
+    out.append(("elasticity.recovered_frac", 0.0,
+                f"{h['recovered_frac']:.3f}"))
+    out.append(("elasticity.worst_recovery_s", 0.0,
+                f"{h['worst_recovery_s']:.2f}"))
+    out.append(("elasticity.recovery_ok", 0.0, str(h["recovery_ok"])))
+    out.append(("elasticity.migration_tput_ratio", 0.0,
+                f"{h['migration_tput_ratio']:.3f}"))
+    out.append(("elasticity.migration_wins", 0.0,
+                str(h["migration_wins"])))
+    out.append(("elasticity.replica_seconds_ratio", 0.0,
+                f"{h['replica_seconds_ratio']:.3f}"))
+    out.append(("elasticity.autoscale_ok", 0.0, str(h["autoscale_ok"])))
+    return out
+
+
+def main():
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write results to this path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale run (CI): exercises kill/drain/"
+                         "autoscale paths, skips the headline win checks")
+    args = ap.parse_args()
+    res = results(smoke=args.smoke)
+    for mode in MODES:
+        r = res[mode]
+        print(f"{mode:>16}: tput {r['offline_throughput']:8.1f} tok/s  "
+              f"ttft {r['slo_ttft']:.3f}  tpot {r['slo_tpot']:.3f}  "
+              f"cost {r['replica_seconds']:6.1f} rep-s  "
+              f"migrated {r['migrated_blocks']} blk  "
+              f"redispatched {r['redispatched_online']}"
+              f"+{r['redispatched_offline']}")
+    h = res["headline"]
+    print(f"headline: recovery {h['recovered_frac']:.0%} of "
+          f"{h['redispatched_online']} online "
+          f"(worst {h['worst_recovery_s']:.2f}s)  "
+          f"recovery_ok={h['recovery_ok']}")
+    print(f"          migration x{h['migration_tput_ratio']:.2f} vs "
+          f"recompute (dTTFT {h['migration_slo_delta_ttft']:+.3f})  "
+          f"migration_wins={h['migration_wins']}")
+    print(f"          autoscale {h['replica_seconds_ratio']:.0%} of static "
+          f"cost (dTTFT {h['autoscale_slo_delta_ttft']:+.3f}, "
+          f"+{h['replicas_added']}/-{h['replicas_drained']} replicas)  "
+          f"autoscale_ok={h['autoscale_ok']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2)
+        print(f"wrote {args.json}")
+    if not args.smoke:
+        if not h["recovery_ok"]:
+            raise SystemExit("kill re-dispatch did not recover >=95% of the "
+                             "dead replica's online requests within SLO")
+        if not h["migration_wins"]:
+            raise SystemExit("KV migration on drain did not beat recompute "
+                             "at equal-or-better SLO attainment")
+        if not h["autoscale_ok"]:
+            raise SystemExit("autoscaled fleet missed the static fleet's "
+                             "SLO by >2 points or spent more "
+                             "replica-seconds")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,7 @@ def _section(name, fn, rows_out):
 
 def main() -> None:
     from benchmarks import (ablations, calibration, capacity, cluster,
-                            estimator_accuracy)
+                            elasticity, estimator_accuracy)
     from benchmarks import figures, kernels_micro, kv_swap, loadgen, roofline
 
     rows = []
@@ -42,6 +42,7 @@ def main() -> None:
     _section("kv_swap", kv_swap.rows, rows)
     _section("capacity", capacity.rows, rows)
     _section("cluster", cluster.rows, rows)
+    _section("elasticity", elasticity.rows, rows)
     _section("kernels", kernels_micro.rows, rows)
     _section("ablations", ablations.rows, rows)
     _section("loadgen", loadgen.rows, rows)

@@ -1,13 +1,18 @@
 """Cluster-scale co-serving: multi-replica router, prefix-affinity offline
-dispatch with work stealing, shared-virtual-clock fleet simulation, and
-fleet capacity planning (§5.4 extended to N replicas)."""
+dispatch with work stealing, shared-virtual-clock fleet simulation with
+dynamic membership + chaos injection, predictive autoscaling, and fleet
+capacity planning (§5.4 extended to N replicas)."""
+from repro.cluster.controller import FleetController
 from repro.cluster.planner import FleetPlanner, FleetReport
-from repro.cluster.replica import Replica, ReplicaLoad, first_block_hash
+from repro.cluster.replica import (Replica, ReplicaLoad, ReplicaState,
+                                   first_block_hash)
 from repro.cluster.router import ROUTER_POLICIES, Router, RouterStats
-from repro.cluster.simulator import ClusterSimulator, ClusterStats
+from repro.cluster.simulator import (ChaosConfig, ClusterSimulator,
+                                     ClusterStats, KillRecord)
 
 __all__ = [
-    "ClusterSimulator", "ClusterStats", "FleetPlanner", "FleetReport",
-    "ROUTER_POLICIES", "Replica", "ReplicaLoad", "Router", "RouterStats",
+    "ChaosConfig", "ClusterSimulator", "ClusterStats", "FleetController",
+    "FleetPlanner", "FleetReport", "KillRecord", "ROUTER_POLICIES",
+    "Replica", "ReplicaLoad", "ReplicaState", "Router", "RouterStats",
     "first_block_hash",
 ]

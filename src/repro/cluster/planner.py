@@ -88,6 +88,19 @@ class FleetPlanner:
         sim.submit_all(clone_requests(online) + clone_requests(offline))
         return sim.run(max_iters=max_iters, until_time=duration)
 
+    def probe(self, online: Sequence[Request], offline: Sequence[Request],
+              n_replicas: int, num_blocks: int, *, host_blocks: int = 0,
+              duration: Optional[float] = None) -> Tuple[float, float]:
+        """One configuration probe — THE shared sweep primitive under
+        ``attainment_curve``, ``plan`` and the autoscaler's sizing oracle:
+        replay the workload through a fleet of this shape and return
+        (min(TTFT, TPOT) attainment, offline tok/s)."""
+        stats = self.simulate(online, offline, n_replicas, num_blocks,
+                              host_blocks=host_blocks, duration=duration)
+        att = min(stats.slo_attainment("ttft"),
+                  stats.slo_attainment("tpot"))
+        return att, stats.offline_throughput()
+
     def attainment_curve(self, online: Sequence[Request], *,
                          candidate_replicas: Sequence[int] = (1, 2, 4),
                          num_blocks: int = 256,
@@ -96,14 +109,9 @@ class FleetPlanner:
         """min(TTFT, TPOT) attainment of the online peak vs. replica count
         at a fixed per-replica block budget (monotone non-decreasing: more
         replicas only ever dilute load)."""
-        out = []
-        for n in sorted(candidate_replicas):
-            stats = self.simulate(online, [], n, num_blocks,
-                                  duration=duration)
-            att = min(stats.slo_attainment("ttft"),
-                      stats.slo_attainment("tpot"))
-            out.append((n, att))
-        return out
+        return [(n, self.probe(online, [], n, num_blocks,
+                               duration=duration)[0])
+                for n in sorted(candidate_replicas)]
 
     # ------------------------------------------------------------- planning
     def plan(self, online_peak: Sequence[Request],
@@ -135,17 +143,14 @@ class FleetPlanner:
         report = FleetReport(None, None)
         for n in sorted(candidate_replicas):
             for nb in sorted(candidate_blocks):
-                stats = self.simulate(online_peak, [], n, nb,
-                                      duration=duration)
-                att = min(stats.slo_attainment("ttft"),
-                          stats.slo_attainment("tpot"))
+                att, _ = self.probe(online_peak, [], n, nb,
+                                    duration=duration)
                 report.slo_by_config.append((n, nb, att))
                 if att < slo_target:
                     continue
                 for hb in sorted(candidate_host_blocks):
-                    full = self.simulate(online_peak, offline, n, nb,
+                    _, tput = self.probe(online_peak, offline, n, nb,
                                          host_blocks=hb, duration=duration)
-                    tput = full.offline_throughput()
                     report.throughput_by_config.append((n, nb, hb, tput))
                     if offline_target is not None and tput < offline_target:
                         continue    # bigger cache/host tier may lift it

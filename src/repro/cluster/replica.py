@@ -7,18 +7,39 @@ A replica exports four signal families (ISSUE: cluster-scale co-serving):
   * prefix locality     — the OfflinePool radix summary merged with what the
                           BlockManager actually holds cached, keyed by the
                           first-block chain hash of each document group
+
+Replicas carry an explicit lifecycle (elastic-fleet refactor):
+
+    JOINING -> UP <-> DEGRADED
+                 \\-> DRAINING -> DOWN       (and UP/DEGRADED -> DOWN on kill)
+
+Only UP/DEGRADED replicas are *routable*. DEGRADED wraps the ground-truth
+clock in a ``DegradedClock`` slowdown (a straggler) without touching the
+scheduler's estimate — the damage surfaces as clock skew, which the
+router's ``predicted_added_latency`` already penalizes. DRAINING replicas
+take no new work and go DOWN once empty; a killed replica's in-flight
+requests are evacuated (KV reset) for re-dispatch elsewhere.
 """
 from __future__ import annotations
 
+import enum
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.block_io import BlockIOSpec
 from repro.core.block_manager import chain_hash, prefix_chain
 from repro.core.engine import EchoEngine
-from repro.core.estimator import TimeModel
+from repro.core.estimator import DegradedClock, TimeModel
 from repro.core.policies import ECHO, PolicyConfig
-from repro.core.request import Request
+from repro.core.request import Request, RequestState
+
+
+class ReplicaState(enum.Enum):
+    JOINING = "joining"        # provisioning; not routable yet
+    UP = "up"                  # healthy, routable
+    DEGRADED = "degraded"      # straggler: routable, clock runs slow
+    DRAINING = "draining"      # no new work; finishes what it holds
+    DOWN = "down"              # out of the fleet (drained or killed)
 
 
 def first_block_hash(req: Request, block_size: int) -> Optional[int]:
@@ -43,12 +64,126 @@ class ReplicaLoad:
 
 
 class Replica:
-    def __init__(self, replica_id: int, engine: EchoEngine):
+    def __init__(self, replica_id: int, engine: EchoEngine,
+                 state: "ReplicaState" = ReplicaState.UP):
         self.id = replica_id
         self.engine = engine
         self.stalls = 0            # consecutive no-progress steps (see sim)
         self.stolen_in = 0
         self.stolen_out = 0
+        self.state = state
+        self.slowdown = 1.0        # DEGRADED clock factor (1.0 = healthy)
+        self.ready_time: Optional[float] = None   # JOINING -> UP instant
+        self.t_up: Optional[float] = (0.0 if state == ReplicaState.UP
+                                      else None)
+        self.t_down: Optional[float] = None
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def routable(self) -> bool:
+        """May the router place new work here? (UP or DEGRADED only —
+        JOINING replicas are not ready, DRAINING/DOWN take no new work.)"""
+        return self.state in (ReplicaState.UP, ReplicaState.DEGRADED)
+
+    def mark_up(self, now: float) -> None:
+        """JOINING -> UP: the replica's cold engine starts at cluster time
+        (its virtual clock cannot lag the fleet it just joined)."""
+        self.state = ReplicaState.UP
+        self.ready_time = None
+        if self.t_up is None:
+            self.t_up = now
+        self.engine.now = max(self.engine.now, now)
+
+    def degrade(self, factor: float) -> None:
+        """UP -> DEGRADED (or re-degrade): wrap the ground-truth clock so
+        every observed iteration runs ``factor``x slower. The scheduler's
+        estimate is untouched — a straggler does not know it is one."""
+        if factor <= 1.0:
+            self.restore()
+            return
+        base = self.engine.clock_model
+        if isinstance(base, DegradedClock):
+            base = base.base
+        self.engine.clock_model = DegradedClock(base, slowdown=factor)
+        self.slowdown = factor
+        if self.state == ReplicaState.UP:
+            self.state = ReplicaState.DEGRADED
+
+    def restore(self) -> None:
+        """DEGRADED -> UP: unwrap the slowdown."""
+        if isinstance(self.engine.clock_model, DegradedClock):
+            self.engine.clock_model = self.engine.clock_model.base
+        self.slowdown = 1.0
+        if self.state == ReplicaState.DEGRADED:
+            self.state = ReplicaState.UP
+
+    def begin_drain(self) -> None:
+        """UP/DEGRADED -> DRAINING: no new dispatches; the replica keeps
+        stepping until it holds no work, then the simulator marks it DOWN."""
+        if self.state in (ReplicaState.UP, ReplicaState.DEGRADED,
+                          ReplicaState.JOINING):
+            self.state = ReplicaState.DRAINING
+
+    def mark_down(self, now: float) -> None:
+        self.state = ReplicaState.DOWN
+        if self.t_down is None:
+            self.t_down = now
+
+    def replica_seconds(self, now: float) -> float:
+        """Seconds this replica has been serving (UP instant to DOWN instant
+        or ``now``) — the cost side of the autoscaling benchmark."""
+        if self.t_up is None:
+            return 0.0
+        end = self.t_down if self.t_down is not None else now
+        return max(end - self.t_up, 0.0)
+
+    # ----------------------------------------------------------- evacuation
+    def inflight_requests(self, include_running: bool = True
+                          ) -> List[Request]:
+        """Every unfinished request this replica is responsible for, online
+        first (the re-dispatch order): scheduler queue, pending intake,
+        radix pool, and — when ``include_running`` — the running batch."""
+        eng = self.engine
+        sched = eng.scheduler
+        online: List[Request] = list(sched.online_queue)
+        online += [r for r in eng.pending if r.is_online]
+        offline: List[Request] = [r for r in eng.pending if not r.is_online]
+        offline += list(self.engine.pool.requests())
+        if include_running:
+            online += [r for r in sched.running if r.is_online]
+            offline += [r for r in sched.running if not r.is_online]
+        return online + offline
+
+    def evacuate(self, include_running: bool = True) -> List[Request]:
+        """Pull unfinished requests out of this replica for re-dispatch
+        elsewhere, releasing every resource they held here (KV blocks,
+        owner pins, pool membership, runner state) and resetting their
+        compute progress — exactly recompute-preemption semantics, so
+        generated tokens are kept and re-prefilled at the new home and
+        ``_fabricate``'s (rid, n_output) seeding continues deterministically.
+        Online requests come first. With ``include_running=False`` (drain)
+        the running batch stays and finishes here."""
+        eng = self.engine
+        sched = eng.scheduler
+        out = self.inflight_requests(include_running)
+        for req in out:
+            if req in sched.online_queue:
+                sched.online_queue.remove(req)
+            if req in eng.pending:
+                eng.pending.remove(req)
+            if req in eng.pool:
+                eng.pool.remove(req)
+            if req in sched.running:
+                sched.running.remove(req)
+            if req.block_ids:
+                eng.bm.free_request(req, eng.now, finished=True)
+            eng.bm.release_owner_pins(req)
+            if eng.runner is not None:
+                eng.runner.release(req.rid)
+            req.computed_tokens = 0
+            req.prefill_target_len = 0
+            req.state = RequestState.WAITING
+        return out
 
     @classmethod
     def simulated(cls, replica_id: int, policy: PolicyConfig = ECHO, *,
@@ -57,7 +192,8 @@ class Replica:
                   clock_model=None,
                   max_batch_tokens: int = 2048, max_running: int = 64,
                   host_kv_blocks: int = 0, seed: int = 0,
-                  io_spec: Optional[BlockIOSpec] = None) -> "Replica":
+                  io_spec: Optional[BlockIOSpec] = None,
+                  state: "ReplicaState" = ReplicaState.UP) -> "Replica":
         """``time_model`` is this replica's *estimate* (what its scheduler
         believes); ``clock_model`` its ground-truth hardware profile — pass
         different ones per replica for a heterogeneous/miscalibrated fleet.
@@ -71,7 +207,7 @@ class Replica:
                          seed=seed, max_batch_tokens=max_batch_tokens,
                          max_running=max_running,
                          host_kv_blocks=host_kv_blocks, io_spec=io_spec)
-        return cls(replica_id, eng)
+        return cls(replica_id, eng, state=state)
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:

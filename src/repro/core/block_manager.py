@@ -180,6 +180,11 @@ class BlockManagerMetrics:
     swapped_in_tokens: int = 0           # recompute avoided via host tier
     swapped_in_bytes: int = 0            # PCIe traffic restored (lazy = free)
     host_bounced_blocks: int = 0         # refused by the full host tier
+    migrated_out_blocks: int = 0         # shipped to another replica
+    migrated_out_bytes: int = 0
+    migrated_in_blocks: int = 0          # received from another replica
+    migrated_in_bytes: int = 0
+    migrate_bounced_blocks: int = 0      # arrivals refused by the host tier
 
     @property
     def hit_rate(self) -> float:
@@ -441,6 +446,67 @@ class BlockManager:
         payload with the runner without an upload — zero link traffic."""
         out, self._swap_events = self._swap_events, []
         return out
+
+    # ------------------------------------------------------------ migration
+    def export_block(self, h: int,
+                     payload_reader: Optional[Callable[[int], object]] = None
+                     ) -> Optional[HostBlock]:
+        """Pull block ``h`` out of this manager as a ``HostBlock`` ready to
+        ship to another replica — the source side of cross-replica KV
+        migration. A host-tier copy is popped directly; an idle (ref == 0)
+        device copy is materialized through ``payload_reader`` (the runner's
+        ``read_block`` on the real path) and its device slot freed. Returns
+        None — and exports nothing — when the hash is absent from both tiers
+        or the device copy is still referenced."""
+        if self.host is not None:
+            hb = self.host.pop(h)
+            if hb is not None:
+                self.metrics.migrated_out_blocks += 1
+                self.metrics.migrated_out_bytes += hb.n_bytes
+                return hb
+        bid = self.hash_to_bid.get(h)
+        if bid is None:
+            return None
+        blk = self.blocks[bid]
+        if blk.ref > 0:
+            return None
+        hb = HostBlock(hash=h, n_tokens=blk.n_tokens,
+                       task_type=blk.task_type,
+                       unfinished_owners=blk.unfinished_owners,
+                       lat=blk.lat,
+                       payload=(payload_reader(bid)
+                                if payload_reader is not None else None),
+                       n_bytes=self.io.block_bytes(blk.n_tokens))
+        del self.hash_to_bid[h]
+        blk.hash = None
+        blk.unfinished_owners = 0
+        blk.n_tokens = 0
+        self.free.append(bid)            # stale heap entries skip hash=None
+        self.metrics.migrated_out_blocks += 1
+        self.metrics.migrated_out_bytes += hb.n_bytes
+        return hb
+
+    def import_host_block(self, hb: HostBlock, now: float) -> bool:
+        """Land a migrated ``HostBlock`` in this manager's host tier — the
+        destination side of cross-replica KV migration. The block becomes
+        restorable by the ordinary ``swap_in`` path (it is indistinguishable
+        from a locally parked prefix). Returns False when the hash is
+        already resident on either tier (no bytes moved) or the host tier
+        refuses it (full of more valuable blocks, or absent)."""
+        if hb.hash in self.hash_to_bid:
+            return False
+        if self.host is None:
+            self.metrics.migrate_bounced_blocks += 1
+            return False
+        if hb.hash in self.host:
+            return False
+        hb.lat = now
+        if not self.host.admit(hb):
+            self.metrics.migrate_bounced_blocks += 1
+            return False
+        self.metrics.migrated_in_blocks += 1
+        self.metrics.migrated_in_bytes += hb.n_bytes
+        return True
 
     def release_owner_pins(self, req: Request) -> None:
         """Drop the unfinished-owner pins an aborted request left on blocks

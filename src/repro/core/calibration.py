@@ -67,15 +67,22 @@ class OnlineCalibrator:
         # denominated so KV-page and state-snapshot transfers share one pool
         self._swap: Deque[Tuple[int, float]] = deque(maxlen=window)
         self._overlap: Deque[Tuple[float, int, float]] = deque(maxlen=window)
+        # inter-node migration observations: (bytes, seconds) for the fabric
+        # terms — same byte-denominated shape as the swap pool
+        self._migrate: Deque[Tuple[int, float]] = deque(maxlen=window)
 
         self.ewma_err: Optional[float] = None
         self.ewma_swap_err: Optional[float] = None
+        self.ewma_migrate_err: Optional[float] = None
         self.n_observed = 0
         self.n_swap_observed = 0
+        self.n_migrate_observed = 0
         self.refits = 0
         self.swap_refits = 0
+        self.migrate_refits = 0
         self._since_refit = 0
         self._since_swap_refit = 0
+        self._since_migrate_refit = 0
         # bounded so a long-running server cannot grow without limit; the
         # default keeps every benchmark-length run intact
         self.history: Deque[CalibrationSample] = deque(maxlen=history_limit)
@@ -149,6 +156,31 @@ class OnlineCalibrator:
             self.refit_swap()
         return rel
 
+    def observe_migration(self, n_bytes: int, observed: float) -> float:
+        """Record one replica->replica prefix shipment of ``n_bytes`` —
+        the fabric analogue of ``observe_swap``. On the virtual path
+        ``observed`` is the ground-truth clock's migration leg. Refits the
+        ``migrate_byte``/``migrate_floor`` terms in place on sustained
+        drift. Returns the shipment's relative error under the (pre-refit)
+        estimate."""
+        if n_bytes <= 0:
+            return 0.0
+        predicted = self.tm.migrate_time(n_bytes)
+        rel = abs(predicted - observed) / max(observed, 1e-12)
+        if self.ewma_migrate_err is None:
+            self.ewma_migrate_err = rel
+        else:
+            self.ewma_migrate_err += \
+                self.ewma_alpha * (rel - self.ewma_migrate_err)
+        self._migrate.append((n_bytes, observed))
+        self.n_migrate_observed += 1
+        self._since_migrate_refit += 1
+        if self.on_residual is not None:
+            self.on_residual("migrate", rel)
+        if self.migrate_drifting():
+            self.refit_migration()
+        return rel
+
     def observe_overlap(self, compute: float, n_bytes: int,
                         total: float) -> None:
         """Record one overlapped iteration (compute, transfer bytes, total
@@ -170,6 +202,12 @@ class OnlineCalibrator:
                 and self.ewma_swap_err > self.drift_threshold
                 and self._since_swap_refit >= self.cooldown
                 and len(self._swap) >= max(self.min_samples // 3, 2))
+
+    def migrate_drifting(self) -> bool:
+        return (self.ewma_migrate_err is not None
+                and self.ewma_migrate_err > self.drift_threshold
+                and self._since_migrate_refit >= self.cooldown
+                and len(self._migrate) >= max(self.min_samples // 3, 2))
 
     # ------------------------------------------------------------- refit
     def _pseudo_prefill(self) -> List[Tuple[Span, float]]:
@@ -261,6 +299,17 @@ class OnlineCalibrator:
         for bucket in (self._swap, self._overlap):
             while len(bucket) > self.cooldown:
                 bucket.popleft()
+
+    def refit_migration(self) -> None:
+        """Refit the inter-node fabric terms from observed shipment times —
+        the migration analogue of ``refit_swap``."""
+        if len(self._migrate) >= 2:
+            self.tm.fit_migrate(list(self._migrate))
+        self.migrate_refits += 1
+        self._since_migrate_refit = 0
+        self.ewma_migrate_err = None     # measure the refit terms afresh
+        while len(self._migrate) > self.cooldown:
+            self._migrate.popleft()
 
     # ------------------------------------------------------------- metrics
     def mean_rel_err(self, last_n: Optional[int] = None) -> float:

@@ -28,7 +28,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.core.block_io import BlockIOSpec, io_spec_for_model, paged_spec
-from repro.core.block_manager import BlockManager
+from repro.core.block_manager import BlockManager, HostBlock, prefix_chain
 from repro.core.calibration import OnlineCalibrator
 from repro.core.estimator import MemoryPredictor, TimeModel
 from repro.core.policies import PolicyConfig
@@ -61,6 +61,7 @@ class IterationRecord:
     host_blocks: int = 0           # host-tier occupancy at iteration end
     swap_transfer_time: float = 0.0  # PCIe seconds put on the copy stream
     swap_exposed_time: float = 0.0   # the tail NOT hidden under compute
+    migrate_in_bytes: int = 0      # fabric bytes received from other replicas
 
 
 @dataclass
@@ -263,6 +264,11 @@ class EngineStats:
         return sum(r.swap_out_bytes for r in self.iterations)
 
     @property
+    def migrated_in_bytes(self) -> int:
+        """Total fabric bytes of cross-replica prefix arrivals clocked."""
+        return sum(r.migrate_in_bytes for r in self.iterations)
+
+    @property
     def swap_transfer_time(self) -> float:
         """Total PCIe seconds put on the copy stream."""
         return sum(r.swap_transfer_time for r in self.iterations)
@@ -374,6 +380,7 @@ class EchoEngine:
         self._pending_swap_out_bytes = 0
         self._pending_swap_in_bytes = 0
         self._pending_swap_wall = 0.0  # its wall time (wall-clock path)
+        self._pending_migrate_in_bytes = 0  # fabric arrivals awaiting clock
         self.pending: List[Request] = []       # (arrival_time, rid) ordered
         self.listeners: List[EngineListener] = []
         self._rng = np.random.default_rng(seed)
@@ -584,6 +591,41 @@ class EchoEngine:
         if total_bytes and getattr(self.tm, "swap_overlap", False):
             cal.observe_overlap(compute_time, total_bytes, iter_time)
 
+    # ---------------------------------------------------------- migration
+    def export_prefix(self, tokens) -> Tuple[List[HostBlock], int]:
+        """Pull the leading cached prefix of ``tokens`` out of this engine
+        as shippable ``HostBlock``s — the source side of cross-replica KV
+        migration (a draining replica, or one the router just stole from).
+        In-flight staging is flushed first so every payload is settled; the
+        walk stops at the first block absent from both tiers or still
+        referenced by a running request. Returns (blocks, total fabric
+        bytes). The *destination* engine charges the fabric time."""
+        self.flush_swaps()
+        reader = None
+        if self.runner is not None and hasattr(self.runner, "read_block"):
+            reader = self.runner.read_block
+        out: List[HostBlock] = []
+        for h in prefix_chain(tokens, self.bm.block_size):
+            hb = self.bm.export_block(h, reader)
+            if hb is None:
+                break
+            out.append(hb)
+        return out, sum(hb.n_bytes for hb in out)
+
+    def import_prefix(self, hbs: Iterable[HostBlock]) -> int:
+        """Land migrated blocks in this engine's host tier, where the
+        ordinary swap-in path restores them exactly like a locally parked
+        prefix. Admitted bytes are charged to the next iteration's transfer
+        leg at the ground-truth clock's ``migrate_time`` rate. Returns the
+        bytes actually admitted (duplicates and host-tier bounces are
+        free — nothing crossed the fabric)."""
+        n_bytes = 0
+        for hb in hbs:
+            if self.bm.import_host_block(hb, self.now):
+                n_bytes += hb.n_bytes
+        self._pending_migrate_in_bytes += n_bytes
+        return n_bytes
+
     def next_arrival_time(self) -> Optional[float]:
         """Earliest pending arrival (engine-clock domain), or None. The
         real-time loop uses it to sleep precisely while idle instead of
@@ -622,10 +664,12 @@ class EchoEngine:
         swap_out_bytes = out_bytes + self._pending_swap_out_bytes
         swap_in_bytes = in_bytes + self._pending_swap_in_bytes
         swap_wall = time.perf_counter() - ts0 + self._pending_swap_wall
+        migrate_in_bytes = self._pending_migrate_in_bytes
         self._pending_swap_out = 0
         self._pending_swap_out_bytes = 0
         self._pending_swap_in_bytes = 0
         self._pending_swap_wall = 0.0
+        self._pending_migrate_in_bytes = 0
         swap_in_tokens = plan.swap_in_tokens
         if plan.n_scheduled == 0 and not plan.swap_ins:
             # an empty plan can still carry preemptions (victims freed for
@@ -642,6 +686,7 @@ class EchoEngine:
             self._pending_swap_out_bytes = swap_out_bytes
             self._pending_swap_in_bytes = swap_in_bytes
             self._pending_swap_wall += swap_wall
+            self._pending_migrate_in_bytes = migrate_in_bytes
             # idle: advance to next arrival
             if self.pending:
                 self.now = max(self.now, self.pending[0].arrival_time)
@@ -717,6 +762,12 @@ class EchoEngine:
         transfer = ((clock.swap_time(swap_in_bytes)
                      + clock.swap_time(swap_out_bytes))
                     if hasattr(clock, "swap_time") else 0.0)
+        # cross-replica arrivals ride the same copy-stream leg, priced at
+        # the inter-node fabric rate instead of the local PCIe rate
+        migrate_transfer = (clock.migrate_time(migrate_in_bytes)
+                            if migrate_in_bytes
+                            and hasattr(clock, "migrate_time") else 0.0)
+        transfer += migrate_transfer
         if self.clock == "virtual":
             compute_time = clock.batch_time(spans, dlens)
             if transfer > 0.0 and hasattr(clock, "overlapped_iteration_time"):
@@ -749,7 +800,11 @@ class EchoEngine:
             # feed the observed clock back into the scheduler's estimate
             self.calibrator.observe(self.now, spans, dlens, compute_time)
             self._observe_swap_clock(swap_in_bytes, swap_out_bytes,
-                                     compute_time, iter_time, swap_transfer)
+                                     compute_time, iter_time,
+                                     swap_transfer - migrate_transfer)
+            if migrate_transfer > 0.0:
+                self.calibrator.observe_migration(migrate_in_bytes,
+                                                  migrate_transfer)
         for req, lg in emissions:               # tokens arrive at iteration end
             self._emit(req, lg)
         for req in plan.preempted:
@@ -801,6 +856,7 @@ class EchoEngine:
             host_blocks=len(self.bm.host) if self.bm.host is not None else 0,
             swap_transfer_time=swap_transfer,
             swap_exposed_time=swap_exposed,
+            migrate_in_bytes=migrate_in_bytes,
         )
         self.stats.iterations.append(rec)
         base_hook = EngineListener.on_iteration

@@ -38,6 +38,8 @@ class TimeModel:
     swap_floor: float = 0.0  # s            (per-transfer dispatch floor)
     swap_launch: float = 0.0  # s           (async copy launch/fence overhead)
     swap_overlap: bool = True  # overlap PCIe transfers with compute (Eq.9)
+    migrate_byte: float = 0.0   # s / byte  (replica->replica over the fabric)
+    migrate_floor: float = 0.0  # s         (per-migration connection setup)
     quadratic_prefill: bool = True
 
     @classmethod
@@ -50,7 +52,8 @@ class TimeModel:
         kw = dict(alpha=2e-7, beta=1e-4, c=2e-3, gamma=3e-5, delta=3e-5,
                   d0=2e-3, lam=0.9,
                   swap_byte=cls.pcie_swap_byte(25.0), swap_floor=1e-4,
-                  swap_launch=5e-5)
+                  swap_launch=5e-5,
+                  migrate_byte=cls.pcie_swap_byte(10.0), migrate_floor=2e-4)
         kw.update(overrides)
         return cls(**kw)
 
@@ -63,7 +66,8 @@ class TimeModel:
         kw = dict(alpha=8e-8, beta=4e-5, c=1e-3, gamma=1.8e-5, delta=1.8e-5,
                   d0=1.2e-3, lam=0.92,
                   swap_byte=cls.pcie_swap_byte(50.0), swap_floor=5e-5,
-                  swap_launch=2e-5)
+                  swap_launch=2e-5,
+                  migrate_byte=cls.pcie_swap_byte(25.0), migrate_floor=1e-4)
         kw.update(overrides)
         return cls(**kw)
 
@@ -127,6 +131,16 @@ class TimeModel:
         if n_bytes <= 0:
             return 0.0
         return self.swap_byte * n_bytes + self.swap_floor
+
+    def migrate_time(self, n_bytes: int) -> float:
+        """Replica-to-replica transfer time for ``n_bytes`` of parked prefix
+        payload over the inter-node fabric — the price of shipping a host-tier
+        block to the replica the router steals toward, instead of recomputing
+        the prefix there. Typically slower per byte than the local PCIe hop
+        (``swap_byte``) and with a higher connection-setup floor."""
+        if n_bytes <= 0:
+            return 0.0
+        return self.migrate_byte * n_bytes + self.migrate_floor
 
     def swap_equiv_tokens(self, n_bytes: int, trips: int = 2) -> float:
         """A swap expressed in recompute-token units (Eq.4's benefit and
@@ -215,6 +229,21 @@ class TimeModel:
         self.swap_floor = float(max(min(np.min(ts), max(float(coef[1]), 0.0)),
                                     0.0))
 
+    def fit_migrate(self, samples: Sequence[Tuple[int, float]]) -> None:
+        """samples: (n_bytes, seconds) for replica->replica prefix shipments —
+        the inter-node analogue of ``fit_swap``; recovers the fabric rate and
+        the per-migration setup floor from observed timings."""
+        if len(samples) < 2:
+            return
+        ns = np.array([s[0] for s in samples], np.float64)
+        ts = np.array([s[1] for s in samples], np.float64)
+        basis = np.stack([ns, np.ones_like(ns)], axis=1)
+        coef, *_ = np.linalg.lstsq(basis, ts, rcond=None)
+        coef = np.maximum(coef, 0.0)
+        self.migrate_byte = float(coef[0])
+        self.migrate_floor = float(max(min(np.min(ts),
+                                           max(float(coef[1]), 0.0)), 0.0))
+
     def fit_swap_overlap(self, samples: Sequence[Tuple[float, int, float]]) -> None:
         """samples: (compute_seconds, transfer_bytes, total_seconds) for
         iterations that carried overlapped swap traffic. Fits the launch
@@ -282,6 +311,11 @@ class PerturbedTimeModel:
         passed straight through to the base model's byte terms."""
         return self.base.swap_time(n_bytes) * self.scale
 
+    def migrate_time(self, n_bytes: int) -> float:
+        """Inter-node fabric hops drift with the same systematic scale as
+        the PCIe terms (one miscalibrated hardware profile)."""
+        return self.base.migrate_time(n_bytes) * self.scale
+
     @property
     def swap_overlap(self) -> bool:
         return self.base.swap_overlap
@@ -298,6 +332,58 @@ class PerturbedTimeModel:
         if transfer <= 0.0:
             return compute
         if not self.base.swap_overlap:
+            return compute + transfer
+        return max(compute, transfer) + self.swap_launch
+
+    def exposed_swap_time(self, compute: float, transfer: float) -> float:
+        return self.overlapped_iteration_time(compute, transfer) - compute
+
+
+@dataclass
+class DegradedClock:
+    """Straggler wrapper for a ground-truth clock: every ground-truth term —
+    compute, PCIe, fabric, launch — runs ``slowdown``x slower than the
+    wrapped clock (a thermally throttled or noisy-neighbour replica).
+
+    Composable over either a plain ``TimeModel`` or a ``PerturbedTimeModel``;
+    it never touches the scheduler's *estimate*, so a degraded replica keeps
+    planning as if healthy and the damage shows up as clock skew — exactly
+    the signal the router's ``predicted_added_latency`` already penalizes."""
+    base: object                    # TimeModel | PerturbedTimeModel
+    slowdown: float = 2.0
+
+    def mean_time(self, prefill_spans: Sequence[Tuple[int, int]],
+                  decode_lens: Sequence[int]) -> float:
+        mean = getattr(self.base, "mean_time", None)
+        t = (mean(prefill_spans, decode_lens) if mean is not None
+             else self.base.batch_time(prefill_spans, decode_lens))
+        return t * self.slowdown
+
+    def batch_time(self, prefill_spans: Sequence[Tuple[int, int]],
+                   decode_lens: Sequence[int]) -> float:
+        return self.base.batch_time(prefill_spans, decode_lens) * self.slowdown
+
+    def swap_time(self, n_bytes: int) -> float:
+        return self.base.swap_time(n_bytes) * self.slowdown
+
+    def migrate_time(self, n_bytes: int) -> float:
+        return self.base.migrate_time(n_bytes) * self.slowdown
+
+    @property
+    def swap_overlap(self) -> bool:
+        return self.base.swap_overlap
+
+    @property
+    def swap_launch(self) -> float:
+        return self.base.swap_launch * self.slowdown
+
+    def overlapped_iteration_time(self, compute: float,
+                                  transfer: float) -> float:
+        """``compute``/``transfer`` arrive already slowed by this wrapper,
+        so only the launch overhead picks up the slowdown here."""
+        if transfer <= 0.0:
+            return compute
+        if not self.swap_overlap:
             return compute + transfer
         return max(compute, transfer) + self.swap_launch
 

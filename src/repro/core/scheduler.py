@@ -451,7 +451,11 @@ class Scheduler:
                 self.running.remove(req)
                 plan.preempted.append(req)
                 self.pool.add(req)
-        plan.decodes = kept
+        # a later decode's alloc may have preempted an EARLIER one already
+        # moved into ``kept`` — restoring it here would emit a ghost token
+        # for a request whose blocks are freed and that sits back in the
+        # queue (it could even "finish" there and later finish again)
+        plan.decodes = [r for r in kept if r not in plan.preempted]
 
         # 3. SLO feasibility of the mandatory part: shed offline work.
         # Shedding removes the chunk from the plan AND rolls its freshly

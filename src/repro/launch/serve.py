@@ -148,9 +148,29 @@ def print_report(service: EchoService, stats, online, offline) -> None:
         print(f"swap overlap: transfer {service.live.swap_transfer_time:.3f}s"
               f"  exposed {service.live.swap_exposed_time:.3f}s"
               f"  hidden {service.live.swap_hidden_frac():.0%}")
-    engines = service.backend.engines()
-    for i, eng in enumerate(engines):
-        tag = f"  replica {i}:" if len(engines) > 1 else "engine:"
+    if router is not None and router.migrations:
+        print(f"kv migration: {router.migrations} shipments  "
+              f"{router.migrated_blocks} blocks  "
+              f"{router.migrated_bytes / 1e6:.1f} MB over the fabric")
+    kills = getattr(stats, "kills", None)
+    if kills:
+        lats = stats.recovery_latencies()
+        worst = f"  worst recovery {max(lats):.2f}s" if lats else ""
+        print(f"chaos: {len(kills)} kill(s)  re-dispatched "
+              f"{stats.redispatched_online} online / "
+              f"{stats.redispatched_offline} offline  "
+              f"lost {stats.lost_tokens} KV tokens{worst}")
+    if getattr(stats, "replica_seconds", 0):
+        print(f"fleet cost: {stats.replica_seconds:.1f} replica-seconds")
+    sim = getattr(service.backend, "sim", None)
+    replicas = sim.replicas if sim is not None else None
+    for i, eng in enumerate(service.backend.engines()):
+        if replicas is not None:
+            rep = replicas[i]
+            tag = f"  replica {rep.id} [{rep.state.value:>8}]:"
+            rid = rep.id
+        else:
+            tag, rid = "engine:", i
         line = (f"{tag} hit rate {eng.bm.metrics.hit_rate:.3f}  "
                 f"offline hit {eng.bm.metrics.offline_hit_rate:.3f}  "
                 f"evictions {eng.bm.metrics.evictions}  "
@@ -160,8 +180,17 @@ def print_report(service: EchoService, stats, online, offline) -> None:
             line += (f"  host {len(eng.bm.host)}/{eng.bm.host.capacity} blk"
                      f"  swap in/out {eng.bm.metrics.swapped_in_tokens}"
                      f"/{eng.bm.metrics.swapped_out_tokens} tok")
+        if eng.bm.metrics.migrated_in_bytes or eng.bm.metrics.migrated_out_bytes:
+            line += (f"  migrated in/out "
+                     f"{eng.bm.metrics.migrated_in_blocks}"
+                     f"/{eng.bm.metrics.migrated_out_blocks} blk")
         if router is not None:
-            line += f"  online served {router.per_replica_online.get(i, 0)}"
+            line += (f"  dispatched {router.per_replica_online.get(rid, 0)}"
+                     f"on/{router.per_replica_offline.get(rid, 0)}off")
+        if replicas is not None:
+            off_tok = sum(r.prompt_len + r.n_output
+                          for r in eng.stats.finished if not r.is_online)
+            line += f"  offline tok {off_tok}"
         if eng.calibrator is not None:
             line += (f"  calib: refits {eng.calibrator.refits} "
                      f"err {eng.calibrator.mean_rel_err(100):.3f}")
@@ -236,11 +265,40 @@ def calibrate(model: Model, params, *, chunk_size=64, num_blocks=192,
     return tm
 
 
+def chaos_config(args):
+    """ChaosConfig from --kill-at/--degrade-at specs; None when unused."""
+    kills, degrades = [], []
+    for spec in args.kill_at or []:
+        t, rid = spec.split(":")
+        kills.append((float(t), int(rid)))
+    for spec in args.degrade_at or []:
+        t, rid, factor, dur = spec.split(":")
+        degrades.append((float(t), int(rid), float(factor), float(dur)))
+    if not kills and not degrades:
+        return None
+    from repro.cluster import ChaosConfig
+    return ChaosConfig(kills=kills, degrades=degrades, seed=args.seed)
+
+
+def autoscaler_for(args):
+    """FleetController from --autoscale/--max-replicas; None when off.
+    The capacity figure defaults to an even share of the configured
+    fleet-wide arrival rate (override with --rate-per-replica)."""
+    if not args.autoscale:
+        return None
+    from repro.cluster import FleetController
+    rate = args.rate_per_replica or args.online_rate / max(args.replicas, 1)
+    return FleetController(min_replicas=args.replicas,
+                           max_replicas=max(args.max_replicas, args.replicas),
+                           rate_per_replica=rate)
+
+
 def serve_cluster(args) -> None:
     """--replicas N dry-run: co-serve a multi-tenant workload across N
     virtual-clock replicas behind the router and print fleet metrics.
     --online-rate scales the fleet-wide arrival rate across tenants;
-    --n-docs/--questions size each tenant's offline corpus."""
+    --n-docs/--questions size each tenant's offline corpus. --kill-at/
+    --degrade-at inject failures; --autoscale turns on elastic membership."""
     from repro.cluster import ClusterSimulator
     from repro.data import default_tenants, make_multi_tenant_workload
 
@@ -263,7 +321,8 @@ def serve_cluster(args) -> None:
                            clock_models=clock_models(args,
                                                      swap_byte=swap_byte),
                            host_kv_blocks=host_kv_blocks(args),
-                           seed=args.seed)
+                           seed=args.seed, chaos=chaos_config(args),
+                           autoscaler=autoscaler_for(args))
     service = EchoService(sim, admission=admission_config(args))
     tracer, registry = setup_obs(args, service)
     stats = service.drive(online + offline, until_time=args.duration * 4)
@@ -379,6 +438,23 @@ def main() -> None:
                     choices=("affinity", "round_robin", "random"))
     ap.add_argument("--tenants", type=int, default=3,
                     help="tenant count for the --replicas workload")
+    ap.add_argument("--kill-at", action="append", metavar="T:RID",
+                    help="chaos: kill replica RID at virtual second T "
+                         "(repeatable); its in-flight work is re-dispatched")
+    ap.add_argument("--degrade-at", action="append",
+                    metavar="T:RID:FACTOR:DUR",
+                    help="chaos: slow replica RID's ground-truth clock by "
+                         "FACTOR for DUR seconds starting at T (repeatable)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="elastic fleet: a FleetController adds replicas on "
+                         "predicted online load and drains idle ones "
+                         "(--replicas is the floor, --max-replicas the cap)")
+    ap.add_argument("--max-replicas", type=int, default=4,
+                    help="--autoscale ceiling on fleet size")
+    ap.add_argument("--rate-per-replica", type=float, default=None,
+                    help="--autoscale capacity figure: online req/s one "
+                         "replica sustains at the SLO (default: an even "
+                         "share of --online-rate)")
     ap.add_argument("--hw-profile", default="a100",
                     help="ground-truth hardware clock preset(s): one of "
                          f"{TimeModel.HW_PROFILES}, comma-separated to cycle "
@@ -450,11 +526,13 @@ def main() -> None:
         serve_realtime(args)
         return
 
-    if args.replicas > 1:
+    elastic = args.autoscale or args.kill_at or args.degrade_at
+    if args.replicas > 1 or elastic:
         if args.arch is not None:
-            ap.error("--arch is incompatible with --replicas > 1: the "
-                     "cluster dry-run is model-free (drop --arch, or use "
-                     "--replicas 1 to serve a real model)")
+            ap.error("--arch is incompatible with the cluster dry-run "
+                     "(--replicas > 1 / --autoscale / --kill-at / "
+                     "--degrade-at): it is model-free — drop --arch, or "
+                     "drop the fleet flags to serve a real model)")
         serve_cluster(args)
         return
 

@@ -136,14 +136,17 @@ class EngineProbe(EngineListener):
             "calibrator sample", ("replica", "kind"), buckets=REL_ERR_BUCKETS)
         self._cal_iter = est_err.labels(rep, "iter")
         self._cal_swap = est_err.labels(rep, "swap")
+        self._cal_migrate = est_err.labels(rep, "migrate")
         ewma = r.gauge("calibrator_ewma_rel_err",
                        "calibrator EWMA relative error", ("replica", "kind"))
         self._ewma_iter = ewma.labels(rep, "iter")
         self._ewma_swap = ewma.labels(rep, "swap")
+        self._ewma_migrate = ewma.labels(rep, "migrate")
         refits = r.gauge("calibrator_refits",
                          "cumulative calibrator refits", ("replica", "kind"))
         self._refits_iter = refits.labels(rep, "iter")
         self._refits_swap = refits.labels(rep, "swap")
+        self._refits_migrate = refits.labels(rep, "migrate")
         self._mem_pred = r.gauge(
             "predicted_online_kv_tokens", "MemoryPredictor mu+k*sigma online "
             "KV demand", ("replica",)).labels(rep)
@@ -173,6 +176,15 @@ class EngineProbe(EngineListener):
         self._swap_in_bytes_c = self._swap_bytes_total.labels(rep, fam, "in")
         self._swap_out_bytes_c = self._swap_bytes_total.labels(rep, fam,
                                                                "out")
+        # cross-replica KV migration: fabric payload this replica imported
+        # (blocks shipped from a drained / stolen-from peer's tiers)
+        self._migrate_in_bytes = r.histogram(
+            "migrate_bytes", "per-iteration inter-replica KV migration "
+            "payload landed in the host tier", ("replica", "family"),
+            buckets=BYTES_BUCKETS).labels(rep, fam)
+        self._migrate_in_bytes_c = r.counter(
+            "migrate_bytes_total", "cumulative inter-replica KV migration "
+            "bytes imported", ("replica", "family")).labels(rep, fam)
         self._swap_exposed = r.histogram(
             "swap_exposed_seconds", "per-iteration swap tail not hidden "
             "under compute", ("replica",), buckets=ITER_BUCKETS).labels(rep)
@@ -185,8 +197,10 @@ class EngineProbe(EngineListener):
             prev = cal.on_residual
 
             def _tap(kind: str, rel: float, _prev=prev) -> None:
-                (self._cal_iter if kind == "iter"
-                 else self._cal_swap).observe(rel)
+                h = {"iter": self._cal_iter, "swap": self._cal_swap,
+                     "migrate": self._cal_migrate}.get(kind)
+                if h is not None:
+                    h.observe(rel)
                 if _prev is not None:
                     _prev(kind, rel)
 
@@ -217,8 +231,14 @@ class EngineProbe(EngineListener):
                 self._ewma_iter.set(cal.ewma_err)
             if cal.ewma_swap_err is not None:
                 self._ewma_swap.set(cal.ewma_swap_err)
+            if cal.ewma_migrate_err is not None:
+                self._ewma_migrate.set(cal.ewma_migrate_err)
             self._refits_iter.set(cal.refits)
             self._refits_swap.set(cal.swap_refits)
+            self._refits_migrate.set(cal.migrate_refits)
+        if rec.migrate_in_bytes > 0:
+            self._migrate_in_bytes.observe(rec.migrate_in_bytes)
+            self._migrate_in_bytes_c.inc(rec.migrate_in_bytes)
         if rec.swap_in_bytes > 0:
             self._swap_in_bytes.observe(rec.swap_in_bytes)
             self._swap_in_bytes_c.inc(rec.swap_in_bytes)

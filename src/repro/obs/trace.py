@@ -92,6 +92,8 @@ class Tracer:
         sim = getattr(backend, "sim", None)
         if sim is not None and getattr(sim, "router", None) is not None:
             self._attach_router(sim.router)
+        if sim is not None and hasattr(sim, "on_lifecycle"):
+            self._attach_lifecycle(sim)
         if service is not None:
             self._attach_service(service)
         return self
@@ -119,6 +121,26 @@ class Tracer:
             router.on_steal = lambda req, frm, to, t: self.instant(
                 ROUTER_PID, 2, f"steal r{frm}->r{to}", t,
                 {"rid": req.rid, "from": frm, "to": to})
+
+    def _attach_lifecycle(self, sim) -> None:
+        """Fleet-membership timeline: one instant per replica lifecycle
+        transition (JOINING/UP/DEGRADED/DRAINING/DOWN) on the router
+        process, plus retroactive instants for transitions that already
+        happened. Chains an existing ``on_lifecycle`` tap."""
+        self.set_process(ROUTER_PID, "router")
+        self.set_thread(ROUTER_PID, 3, "lifecycle")
+        for t, rid, state in getattr(sim, "lifecycle_log", []):
+            self.instant(ROUTER_PID, 3, f"r{rid} {state}", t,
+                         {"replica": rid, "state": state})
+        prev = sim.on_lifecycle
+
+        def _tap(rid: int, state: str, t: float, _prev=prev) -> None:
+            self.instant(ROUTER_PID, 3, f"r{rid} {state}", t,
+                         {"replica": rid, "state": state})
+            if _prev is not None:
+                _prev(rid, state, t)
+
+        sim.on_lifecycle = _tap
 
     def _attach_service(self, service) -> None:
         self.set_process(SERVICE_PID, "service")

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 from typing import List, Optional
 
+from repro.cluster.replica import ReplicaState
 from repro.cluster.simulator import ClusterSimulator
 from repro.core.engine import MAX_STALLS, EchoEngine, EngineListener
 from repro.core.request import Request
@@ -113,7 +114,7 @@ class ClusterBackend:
         and the service's held-arrival release mirrors that condition. With
         nothing busy, time has effectively advanced to the latest clock."""
         busy = [rep.engine.now for rep in self.sim.replicas
-                if rep.has_work()]
+                if rep.state != ReplicaState.DOWN and rep.has_work()]
         if busy:
             return min(busy)
         return max((eng.now for eng in self.engines()), default=0.0)
@@ -155,8 +156,13 @@ class ClusterBackend:
         return n
 
     def predicted_ttft(self, req: Request) -> float:
-        return min(rep.predicted_added_latency(req)
-                   for rep in self.sim.replicas)
+        """Best placement among replicas the router would actually use —
+        JOINING/DRAINING/DOWN members must not make admission optimistic.
+        With no routable replica (mid-failover), infinity: shed/queue."""
+        live = self.sim.router.routable()
+        if not live:
+            return float("inf")
+        return min(rep.predicted_added_latency(req) for rep in live)
 
 
 def make_backend(target):

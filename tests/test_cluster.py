@@ -1,8 +1,11 @@
 """Cluster subsystem: router placement, work stealing, fleet determinism,
 and planner monotonicity."""
+import pytest
+
 from repro.cluster import (ClusterSimulator, FleetPlanner, Replica, Router,
                            first_block_hash)
-from repro.core import ECHO, SLO, Request, TaskType, TimeModel
+from repro.core import (ECHO, SLO, Request, RequestState, TaskType,
+                        TimeModel)
 from repro.core.simulator import clone_requests
 from repro.data import (TenantSpec, default_tenants,
                         make_multi_tenant_workload)
@@ -101,6 +104,54 @@ def test_work_stealing_on_online_spike():
     assert moved > 0
     assert reps[1].offline_backlog() == moved
     assert reps[0].stolen_out == moved and reps[1].stolen_in == moved
+
+
+def test_rebalance_survives_donor_queue_emptying_mid_scan():
+    """Two donors spike at once. Donor 0's stealable queue holds fewer
+    requests than ``steal_batch`` (it empties mid-steal); donor 1 reports
+    ``offline_backlog() > 0`` but its only offline request is RUNNING, so
+    ``steal_offline`` yields nothing — rebalance must skip it without
+    crashing or double-counting a steal event."""
+    reps = _replicas(3)
+    router = Router(reps, policy="affinity", steal_queue_depth=4,
+                    steal_batch=8)
+    bs = reps[0].engine.bm.block_size
+    doc = tuple(range(700, 700 + 2 * bs))
+    for _ in range(4):                       # donor 0: online spike...
+        reps[0].engine.scheduler.online_queue.append(_online(128))
+    for i in range(2):                       # ...but only 2 stealable reqs
+        reps[0].engine.submit(_offline(doc + (i,)))
+    for _ in range(4):                       # donor 1: spike + backlog that
+        reps[1].engine.scheduler.online_queue.append(_online(128))
+    stuck = _offline(tuple(range(900, 900 + bs)))
+    stuck.state = RequestState.RUNNING       # ...is entirely in-flight
+    reps[1].engine.scheduler.running.append(stuck)
+    assert reps[1].offline_backlog() == 1
+
+    moved = router.rebalance()
+    assert moved == 2                        # donor 0 drained dry, no error
+    assert reps[0].offline_backlog() == 0
+    assert reps[2].offline_backlog() == 2    # calm replica took the work
+    assert reps[1].offline_backlog() == 1    # running request never moves
+    assert router.stats.steals == 1          # donor 1 contributed no event
+    assert router.stats.stolen_requests == 2
+    assert router.rebalance() == 0           # second scan finds nothing
+
+
+def test_dispatch_targets_up_replica_when_fleet_idle_but_one_draining():
+    """Every replica reports ``has_work() == False`` but one is DRAINING:
+    dispatch must route both task types to the UP replica, and raise once
+    no routable replica remains."""
+    reps = _replicas(2)
+    reps[0].begin_drain()
+    assert not any(r.has_work() for r in reps)
+    router = Router(reps, policy="affinity")
+    assert router.routable() == [reps[1]]
+    assert router.dispatch(_online(64)) is reps[1]
+    assert router.dispatch(_offline(tuple(range(400, 432)))) is reps[1]
+    reps[1].begin_drain()
+    with pytest.raises(RuntimeError, match="no routable replica"):
+        router.dispatch(_online(64))
 
 
 # ---------------------------------------------------------------- simulator

@@ -1,0 +1,362 @@
+"""Elastic fleet: replica lifecycle, chaos kill/straggler injection,
+re-dispatch accounting, autoscaling, and cross-replica KV migration."""
+import jax
+import pytest
+
+from repro.cluster import (ChaosConfig, ClusterSimulator, FleetController,
+                           FleetPlanner, Replica, ReplicaState,
+                           first_block_hash)
+from repro.core import ECHO, SLO, Request, TaskType, TimeModel
+from repro.core.estimator import DegradedClock
+from repro.core.simulator import clone_requests
+from repro.data import TenantSpec, make_multi_tenant_workload
+
+
+def _tm():
+    return TimeModel.a100()
+
+
+def _online(plen=64, t=0.0, max_new=8):
+    return Request(prompt=tuple(range(plen)), max_new_tokens=max_new,
+                   task_type=TaskType.ONLINE, arrival_time=t,
+                   slo=SLO(1.0, 0.1))
+
+
+def _offline(prompt, t=0.0, max_new=4):
+    return Request(prompt=tuple(prompt), max_new_tokens=max_new,
+                   task_type=TaskType.OFFLINE, arrival_time=t)
+
+
+def _workload(duration=8.0, seed=0, n_docs=4, questions=12):
+    tenants = (TenantSpec("a", online_rate=2.0, n_docs=n_docs,
+                          questions_per_doc=questions),
+               TenantSpec("b", online_rate=1.0, slo=SLO(1.5, 0.15),
+                          n_docs=n_docs, questions_per_doc=questions))
+    return make_multi_tenant_workload(tenants, duration, seed=seed)
+
+
+def _sim(n=2, **kw):
+    kw.setdefault("num_blocks", 96)
+    kw.setdefault("time_model", _tm())
+    return ClusterSimulator(n, ECHO, seed=0, **kw)
+
+
+# ---------------------------------------------------------------- lifecycle
+def test_replica_lifecycle_transitions():
+    rep = Replica.simulated(0, ECHO, num_blocks=32, time_model=_tm(),
+                            state=ReplicaState.JOINING)
+    assert not rep.routable and rep.t_up is None
+    rep.mark_up(3.0)
+    assert rep.state == ReplicaState.UP and rep.routable and rep.t_up == 3.0
+    assert rep.engine.now >= 3.0, "a joiner's clock cannot lag the fleet"
+
+    rep.degrade(3.0)
+    assert rep.state == ReplicaState.DEGRADED
+    assert rep.routable, "a straggler still takes work"
+    assert isinstance(rep.engine.clock_model, DegradedClock)
+    assert rep.engine.clock_model.slowdown == 3.0
+    # the scheduler's estimate is untouched — a straggler plans as healthy
+    assert not isinstance(rep.engine.tm, DegradedClock)
+    rep.degrade(5.0)           # re-degrade replaces, never nests
+    assert rep.engine.clock_model.slowdown == 5.0
+    assert not isinstance(rep.engine.clock_model.base, DegradedClock)
+    rep.restore()
+    assert rep.state == ReplicaState.UP
+    assert not isinstance(rep.engine.clock_model, DegradedClock)
+
+    rep.begin_drain()
+    assert rep.state == ReplicaState.DRAINING and not rep.routable
+    rep.mark_down(10.0)
+    assert rep.state == ReplicaState.DOWN
+    assert rep.replica_seconds(99.0) == pytest.approx(7.0)
+
+
+def test_add_replica_joins_after_delay():
+    sim = _sim(1, join_delay=1.0)
+    online, offline = _workload(duration=4.0)
+    sim.submit_all(clone_requests(online) + clone_requests(offline))
+    sim.run(until_time=2.0)
+    rep = sim.add_replica()
+    t_add = sim.now
+    assert rep.state == ReplicaState.JOINING
+    assert rep not in sim.router.routable()
+    stats = sim.run(until_time=100.0)
+    assert rep.state == ReplicaState.UP
+    assert rep.t_up == pytest.approx(t_add + 1.0)
+    states = [(rid, s) for _, rid, s in stats.lifecycle if rid == rep.id]
+    assert states == [(rep.id, "joining"), (rep.id, "up")]
+    on, off = stats.finished_counts()
+    assert on == len(online) and off == len(offline)
+
+
+def test_drain_refuses_last_routable_replica():
+    sim = _sim(2)
+    assert sim.drain_replica(0)
+    assert not sim.drain_replica(1), "never drain the last home of work"
+    assert sim.replicas[1].state == ReplicaState.UP
+
+
+# ------------------------------------------------------------- chaos: kill
+def test_kill_redispatches_with_zero_leaks():
+    online, offline = _workload()
+    sim = _sim(2)
+    sim.submit_all(clone_requests(online) + clone_requests(offline))
+    sim.run(until_time=1.5)
+    victim = max(sim.replicas,
+                 key=lambda r: len(r.inflight_requests()))
+    assert victim.inflight_requests(), "kill must strand in-flight work"
+
+    rec = sim.kill_replica(victim.id)
+    assert rec is not None and rec.rids
+    assert rec.redispatched_online + rec.redispatched_offline \
+        == len(rec.rids)
+    assert rec.lost_tokens > 0, "computed KV must be discarded at the kill"
+    # the dead replica holds nothing: no device refs, no pins, no queues
+    eng = victim.engine
+    assert sum(b.ref for b in eng.bm.blocks) == 0
+    assert all(b.unfinished_owners == 0 for b in eng.bm.blocks)
+    assert len(eng.pool) == 0 and not eng.pending
+    assert not victim.has_work()
+    assert victim.state == ReplicaState.DOWN
+
+    stats = sim.run(until_time=200.0)
+    fin = {r.rid for r in stats.merged().finished}
+    assert set(rec.rids) <= fin, "every evacuee must finish on a survivor"
+    on, off = stats.finished_counts()
+    assert on == len(online) and off == len(offline)
+    lats = stats.recovery_latencies()
+    assert len(lats) == len(rec.rids)
+    assert stats.lost_tokens == rec.lost_tokens
+
+
+def test_kill_last_replica_requeues_until_joiner_arrives():
+    sim = _sim(1)
+    online, offline = _workload(duration=3.0)
+    sim.submit_all(clone_requests(online) + clone_requests(offline))
+    sim.run(until_time=1.0)
+    rec = sim.kill_replica(0)
+    assert rec.rids, "the kill must strand work"
+    assert not sim.router.routable()
+    pending_rids = {r.rid for _, _, r in sim._pending}
+    assert set(rec.rids) <= pending_rids, \
+        "with no survivor the evacuees re-enter the arrival heap"
+    rep = sim.add_replica()
+    stats = sim.run(until_time=200.0)
+    assert rep.state == ReplicaState.UP
+    on, off = stats.finished_counts()
+    assert on == len(online) and off == len(offline)
+
+
+def test_chaos_sample_is_seed_deterministic():
+    a = ChaosConfig.sample(4, 30.0, seed=3, kill_prob=0.5, degrade_prob=0.3)
+    b = ChaosConfig.sample(4, 30.0, seed=3, kill_prob=0.5, degrade_prob=0.3)
+    c = ChaosConfig.sample(4, 30.0, seed=4, kill_prob=0.5, degrade_prob=0.3)
+    assert (a.kills, a.degrades) == (b.kills, b.degrades)
+    assert (a.kills, a.degrades) != (c.kills, c.degrades)
+
+
+# -------------------------------------------------------- chaos: straggler
+def test_straggler_slows_ground_truth_and_restores():
+    online, offline = _workload(duration=6.0)
+    chaos = ChaosConfig(degrades=[(0.5, 0, 4.0, 4.0)])
+    healthy, degraded = _sim(1), _sim(1, chaos=chaos)
+    for sim in (healthy, degraded):
+        sim.submit_all(clone_requests(online, preserve_rid=True)
+                       + clone_requests(offline, preserve_rid=True))
+    h = healthy.run(until_time=200.0)
+    d = degraded.run(until_time=200.0)
+    on, off = d.finished_counts()
+    assert on == len(online) and off == len(offline)
+    assert degraded.fleet_now() > healthy.fleet_now(), \
+        "a 4x straggler episode must show up as a longer makespan"
+    assert [s for _, _, s in d.lifecycle] == ["degraded", "up"]
+    # clock unwrapped after the episode
+    assert not isinstance(degraded.replicas[0].engine.clock_model,
+                          DegradedClock)
+    assert min(d.slo_attainment("ttft"), d.slo_attainment("tpot")) \
+        <= min(h.slo_attainment("ttft"), h.slo_attainment("tpot")) + 1e-9
+
+
+# -------------------------------------------------------------- autoscaler
+def test_autoscaler_adds_on_burst_then_drains_idle():
+    ctrl = FleetController(min_replicas=1, max_replicas=3,
+                           rate_per_replica=3.0, interval=0.5,
+                           cooldown=1.0, queue_high=2, window=4.0,
+                           bin_s=1.0)
+    sim = _sim(1, autoscaler=ctrl, join_delay=0.25)
+    reqs = [_online(96, t=i * 0.05, max_new=16) for i in range(60)]
+    reqs += [_online(64, t=4.0 + i * 1.0, max_new=4) for i in range(16)]
+    sim.submit_all(clone_requests(reqs))
+    stats = sim.run(until_time=200.0)
+    assert ctrl.n_added > 0, "the burst must trigger a scale-up"
+    assert ctrl.n_drained > 0, "the quiet tail must trigger a scale-down"
+    assert len(sim.replicas) <= 1 + ctrl.n_added
+    assert len(sim.router.routable()) >= ctrl.min_replicas
+    on, _ = stats.finished_counts()
+    assert on == len(reqs)
+    # drained replicas were idle when cut loose: nothing may be lost
+    assert stats.replica_seconds < len(sim.replicas) * sim.fleet_now()
+
+
+def test_autoscaler_never_exceeds_max_replicas():
+    ctrl = FleetController(min_replicas=1, max_replicas=2,
+                           rate_per_replica=0.5, interval=0.5,
+                           cooldown=0.5, queue_high=1)
+    sim = _sim(1, autoscaler=ctrl, join_delay=0.25)
+    sim.submit_all([_online(128, t=i * 0.02, max_new=16) for i in range(80)])
+    sim.run(until_time=200.0)
+    assert len(sim.replicas) <= 2
+
+
+def test_autoscaler_calibrates_rate_from_planner():
+    online, _ = _workload(duration=6.0)
+    ctrl = FleetController(min_replicas=1, max_replicas=3)
+    rate = ctrl.calibrate(FleetPlanner(_tm(), seed=0),
+                          [r for r in online if r.is_online],
+                          num_blocks=96, duration=12.0)
+    assert rate is not None and rate > 0
+    assert ctrl.rate_per_replica == rate
+    assert ctrl.desired_replicas(0.0) >= 1
+
+
+# -------------------------------------------------- migration: virtual clock
+def test_drain_migrates_parked_prefix_and_charges_fabric():
+    sim = _sim(2, host_kv_blocks=128)
+    bs = sim.replicas[0].engine.bm.block_size
+    doc = tuple(range(5000, 5000 + 8 * bs))
+    # establish the group's home: run a few members to completion so the
+    # document prefix sits cached (unreferenced) on one replica
+    seeds = [_offline(doc + (i,), t=0.0, max_new=4) for i in range(3)]
+    sim.submit_all(clone_requests(seeds))
+    sim.run(until_time=100.0)
+    home = max(sim.replicas,
+               key=lambda r: r.affinity(first_block_hash(seeds[0], bs)))
+    # queue fresh group members on the home, then drain it: the evacuees
+    # re-dispatch to the survivor and the parked prefix ships with them
+    late = [_offline(doc + (100 + i,), t=sim.now, max_new=4)
+            for i in range(6)]
+    for r in clone_requests(late):
+        home.submit(r)
+    assert sim.drain_replica(home.id)
+    other = next(r for r in sim.replicas if r is not home)
+    assert sim.router.stats.migrations > 0
+    assert sim.router.stats.migrated_bytes > 0
+    assert other.engine.bm.metrics.migrated_in_blocks > 0
+    stats = sim.run(until_time=300.0)
+    on, off = stats.finished_counts()
+    assert off == len(seeds) + len(late)
+    assert home.state == ReplicaState.DOWN
+    # the migrated prefix was restored, not recomputed: the new home
+    # swapped those blocks in from its host tier
+    assert other.engine.bm.metrics.swapped_in_tokens > 0
+    assert other.engine.stats.migrated_in_bytes > 0, \
+        "fabric time must be charged on the destination's clock"
+
+
+def test_migrate_time_terms_priced():
+    tm = _tm()
+    assert tm.migrate_time(0) == 0.0
+    one_mb = tm.migrate_time(1 << 20)
+    assert one_mb > tm.migrate_floor > 0
+    assert tm.migrate_time(2 << 20) > one_mb
+    assert tm.migrate_time(1 << 20) > tm.swap_time(1 << 20), \
+        "the inter-node fabric is slower than the local PCIe hop"
+
+
+# ------------------------------------------------ migration: real runner
+def test_migrated_prefix_is_bit_exact_with_paged_runner(tiny_model):
+    """Acceptance: a migrated prefix must restore into the destination
+    engine's attention exactly as locally computed KV would — same greedy
+    tokens from the re-homed question as from the original home."""
+    from test_engine import _reference_generate
+
+    from repro.core.engine import EchoEngine
+
+    model, params = tiny_model
+
+    def make_engine():
+        return EchoEngine(model, params, ECHO, num_blocks=16, block_size=8,
+                          chunk_size=16, max_pages_per_seq=16,
+                          host_kv_blocks=32)
+
+    import numpy as np
+    rng = np.random.default_rng(5)
+    vocab = model.cfg.vocab_size
+    doc = tuple(int(x) for x in rng.integers(0, vocab, 48))    # 6 blocks
+    q = tuple(int(x) for x in rng.integers(0, vocab, 8))
+
+    src = make_engine()
+    seed_req = _offline(doc, max_new=2)
+    src.submit(seed_req)
+    src.run(max_iters=200)
+    assert seed_req.done
+
+    local = _offline(doc + q, max_new=6)
+    src.submit(local)
+    src.run(max_iters=200)
+    assert local.done
+
+    hbs, n_bytes = src.export_prefix(doc)
+    assert hbs and n_bytes > 0
+    payloads = [hb.payload for hb in hbs]
+    assert all(p is not None for p in payloads), \
+        "a real-runner export must carry the actual KV pages"
+
+    dst = make_engine()
+    admitted = dst.import_prefix(hbs)
+    assert admitted == n_bytes
+    moved = _offline(doc + q, max_new=6)
+    dst.submit(moved)
+    dst.run(max_iters=200)
+    assert moved.done
+    assert dst.bm.metrics.migrated_in_blocks == len(hbs)
+    assert dst.bm.metrics.swapped_in_tokens > 0, \
+        "the question must restore the migrated prefix, not recompute it"
+    ref = _reference_generate(model, params, doc + q, 6)
+    assert moved.output_tokens == ref, "migrated KV diverged from computed"
+    assert local.output_tokens == ref
+
+
+def test_export_import_roundtrip_dedups(tiny_model):
+    model, params = tiny_model
+    from repro.core.engine import EchoEngine
+    src = EchoEngine(model, params, ECHO, num_blocks=16, block_size=8,
+                     chunk_size=16, max_pages_per_seq=16, host_kv_blocks=32)
+    import numpy as np
+    rng = np.random.default_rng(9)
+    doc = tuple(int(x) for x in
+                rng.integers(0, model.cfg.vocab_size, 24))     # 3 blocks
+    r = _offline(doc, max_new=2)
+    src.submit(r)
+    src.run(max_iters=100)
+    hbs, _ = src.export_prefix(doc)
+    assert hbs
+    dst = EchoEngine(None, None, ECHO, num_blocks=16, block_size=8,
+                     chunk_size=16, host_kv_blocks=32)
+    first = dst.import_prefix(hbs)
+    again = dst.import_prefix(hbs)
+    assert first > 0
+    assert again == 0, "duplicate imports must not cross the fabric twice"
+    assert dst.bm.metrics.migrated_in_blocks == len(hbs)
+
+
+# ------------------------------------------------------------ determinism
+def test_chaos_run_is_deterministic():
+    online, offline = _workload(duration=5.0)
+    chaos = ChaosConfig(kills=[(1.0, 0)], degrades=[(0.5, 1, 3.0, 2.0)])
+
+    def run():
+        sim = _sim(2, chaos=chaos)
+        sim.submit_all(clone_requests(online, preserve_rid=True)
+                       + clone_requests(offline, preserve_rid=True))
+        stats = sim.run(until_time=200.0)
+        return (sorted((r.rid, tuple(r.output_tokens))
+                       for r in stats.merged().finished),
+                stats.lifecycle)
+
+    assert run() == run()
+
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+_ = jax  # tiny_model fixture pulls in jax; keep the import explicit
