@@ -1,0 +1,82 @@
+"""Kernel bench-floor gate for CI: compare a fresh
+``kernels_micro.py --json`` run against the committed baseline.
+
+Two gates per kernel row:
+
+  * numerics — every ``pallas_matches`` boolean is a HARD gate: a False
+    anywhere in the current run fails, baseline or not. A kernel that
+    disagrees with ``kernels/ref.py`` is wrong, never merely slow.
+  * timing — ``us_per_call`` must stay under ``baseline * (1 + tolerance)``
+    (lower is better; improvements always pass). Unlike the virtual-clock
+    floors in ``check_floor.py`` these are wall timings on shared CI
+    runners, so the default tolerance is generous (1.0 → a 2x ceiling):
+    it catches an accidental algorithmic regression — a gather-path
+    fallback, a lost jit cache — without flaking on machine noise.
+
+To accept an intentional change, regenerate the baseline in-repo:
+
+    PYTHONPATH=src:. python benchmarks/kernels_micro.py \
+        --json benchmarks/baselines/kernels_micro.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(current: dict, baseline: dict, tolerance: float) -> list:
+    """Returns a list of human-readable violations (empty = pass)."""
+    violations = []
+    for name, cur in current.items():
+        if not cur.get("pallas_matches", False):
+            violations.append(
+                f"{name}.pallas_matches: False — kernel disagrees with "
+                "kernels/ref.py (hard gate)")
+    for name, base in baseline.items():
+        cur = current.get(name)
+        if cur is None:
+            violations.append(f"{name}: missing from current results")
+            continue
+        ceiling = base["us_per_call"] * (1.0 + tolerance)
+        if cur["us_per_call"] > ceiling:
+            violations.append(
+                f"{name}.us_per_call: {cur['us_per_call']:.1f} > ceiling "
+                f"{ceiling:.1f} (baseline {base['us_per_call']:.1f} "
+                f"+{tolerance:.0%})")
+    return violations
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True,
+                    help="JSON from a fresh benchmarks/kernels_micro.py "
+                         "--json run")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/kernels_micro.json",
+                    help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=1.0,
+                    help="relative us_per_call headroom over baseline "
+                         "(default 1.0 = 2x ceiling; wall time on shared "
+                         "runners is noisy)")
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    violations = check(current, baseline, args.tolerance)
+    if violations:
+        print("kernel benchmark floor violated:", file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        print("if intentional, refresh the baseline:\n"
+              "  PYTHONPATH=src:. python benchmarks/kernels_micro.py "
+              "--json benchmarks/baselines/kernels_micro.json",
+              file=sys.stderr)
+        raise SystemExit(1)
+    print(f"kernel floor ok: {len(baseline)} kernels match ref and sit "
+          f"under {1.0 + args.tolerance:.1f}x baseline time")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,9 +2,14 @@
 
 Reads experiments/dryrun/*.json and prints per (arch x shape x mesh):
 compute / memory / collective seconds, dominant term, MODEL_FLOPS ratio.
+
+CLI: ``python benchmarks/roofline.py [--json out.json]`` — the JSON mode
+(what CI uploads as an artifact) carries the raw dry-run records plus the
+summary table rows.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -56,5 +61,28 @@ def table() -> str:
     return "\n".join(lines)
 
 
-if __name__ == "__main__":
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write {records, rows} from the dry-run artifacts")
+    ap.add_argument("--mesh", default=None,
+                    help="filter records by mesh name (e.g. pod16x16)")
+    args = ap.parse_args()
+    if args.json:
+        recs = load_records(args.mesh)
+        payload = {
+            "records": recs,
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in rows(single_pod_only=False)],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        ok = sum(1 for r in recs if r.get("ok"))
+        print(f"roofline: {ok}/{len(recs)} dry-run records ok -> {args.json}")
+        if ok < len(recs):
+            raise SystemExit(1)
     print(table())
+
+
+if __name__ == "__main__":
+    main()

@@ -318,7 +318,9 @@ class EchoEngine:
                  clock: str = "virtual", seed: int = 0,
                  max_batch_tokens: int = 2048, max_running: int = 64,
                  host_kv_blocks: int = 0,
-                 io_spec: Optional[BlockIOSpec] = None):
+                 io_spec: Optional[BlockIOSpec] = None,
+                 attn_impl: str = "auto",
+                 kernel_profile: Optional[str] = None):
         self.model = model
         self.policy = policy
         self.clock = clock
@@ -353,7 +355,8 @@ class EchoEngine:
             if set(model.cfg.attn_layers) <= {"attn", "moe"}:
                 self.runner = PagedRunner(model, params, num_blocks,
                                           block_size, max_pages_per_seq,
-                                          chunk_size)
+                                          chunk_size, attn_impl=attn_impl,
+                                          kernel_profile=kernel_profile)
             else:
                 from repro.models.state_cache import StateRunner
                 self.runner = StateRunner(model, params, num_blocks,

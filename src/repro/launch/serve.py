@@ -370,7 +370,9 @@ def serve_realtime(args) -> None:
                             num_blocks=args.num_blocks, block_size=16,
                             chunk_size=64, max_pages_per_seq=32,
                             time_model=tm,
-                            host_kv_blocks=host_kv_blocks(args, io))
+                            host_kv_blocks=host_kv_blocks(args, io),
+                            attn_impl=args.attn_impl,
+                            kernel_profile=args.kernel_profile)
     rt = AsyncEchoEngine(target, admission=admission_config(args))
     tracer, registry = None, None
     if args.trace_out or args.metrics_out:
@@ -459,6 +461,15 @@ def main() -> None:
                     help="ground-truth hardware clock preset(s): one of "
                          f"{TimeModel.HW_PROFILES}, comma-separated to cycle "
                          "profiles over a heterogeneous --replicas fleet")
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=["auto", "ref", "pallas", "splitk"],
+                    help="attention kernel path on the real-model runner: "
+                         "auto = jnp oracle on CPU / split-K Pallas on "
+                         "accelerators (see repro.kernels.ops)")
+    ap.add_argument("--kernel-profile", default=None,
+                    choices=["a100", "h100", "cpu"],
+                    help="kernel block-size tuning table (default: resolve "
+                         "from the jax backend)")
     ap.add_argument("--hw-drift", type=float, default=1.0,
                     help="scale the ground-truth clock by this factor "
                          "(2.0 = hardware runs 2x slower than the estimate)")
@@ -565,7 +576,9 @@ def main() -> None:
                      block_size=16, chunk_size=64,
                      max_pages_per_seq=32, time_model=tm,
                      clock_model=clocks[0] if clocks else None,
-                     host_kv_blocks=host_kv_blocks(args, io))
+                     host_kv_blocks=host_kv_blocks(args, io),
+                     attn_impl=args.attn_impl,
+                     kernel_profile=args.kernel_profile)
     service = EchoService(eng, admission=admission_config(args))
     tracer, registry = setup_obs(args, service)
     stats = service.drive(online + offline, max_iters=100_000,

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.block_io import io_spec_for_model
-from repro.kernels import ref as kref
+from repro.kernels import ops as kops
 from repro.models import transformer as tfm
 from repro.models.common import rms_norm, rope_angles, swiglu
 from repro.models.model import Model
@@ -42,7 +42,7 @@ def _gather_pages(pages, block_table):
 
 
 def _attn_prefill_paged(p, cfg, x, cos, sin, k_pages, v_pages, block_table,
-                        ctx_len, chunk_len):
+                        ctx_len, chunk_len, impl="auto", preset=None):
     """x (1,Sc,d). Writes chunk KV into pages, attends vs prefix+chunk."""
     from repro.models.attention import _qkv
     sc = x.shape[1]
@@ -57,12 +57,14 @@ def _attn_prefill_paged(p, cfg, x, cos, sin, k_pages, v_pages, block_table,
     v_pages = _write_pages(v_pages, idx, v[0])
     kk = _gather_pages(k_pages, block_table)
     vv = _gather_pages(v_pages, block_table)
-    out = kref.ref_chunked_prefill_attention(q[0], kk, vv, ctx_len)
+    out = kops.chunked_prefill_attention(q[0], kk, vv, ctx_len, impl=impl,
+                                         preset=preset)
     out = jnp.einsum("shk,hkd->sd", out, p["wo"])[None]
     return out, k_pages, v_pages
 
 
-def _attn_decode_paged(p, cfg, x, cos, sin, k_pages, v_pages, block_tables, pos):
+def _attn_decode_paged(p, cfg, x, cos, sin, k_pages, v_pages, block_tables,
+                       pos, impl="auto", preset=None):
     """x (B,1,d); block_tables (B,nblk); pos (B,). ctx = pos + 1."""
     from repro.models.attention import _qkv
     b = x.shape[0]
@@ -75,8 +77,8 @@ def _attn_decode_paged(p, cfg, x, cos, sin, k_pages, v_pages, block_tables, pos)
     flat_idx = jnp.where(pos >= 0, flat_idx, oob)     # padded rows: drop
     k_pages = _write_pages(k_pages, flat_idx, k[:, 0])
     v_pages = _write_pages(v_pages, flat_idx, v[:, 0])
-    out = kref.ref_paged_attention(q[:, 0], k_pages, v_pages, block_tables,
-                                   pos + 1)
+    out = kops.paged_attention(q[:, 0], k_pages, v_pages, block_tables,
+                               pos + 1, impl=impl, preset=preset)
     out = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
     return out, k_pages, v_pages
 
@@ -96,7 +98,8 @@ class PagedRunner:
     """Owns the page pool and the jitted paged prefill/decode callables."""
 
     def __init__(self, model: Model, params, num_pages: int, page_size: int,
-                 max_pages_per_seq: int, chunk_size: int):
+                 max_pages_per_seq: int, chunk_size: int,
+                 attn_impl: str = "auto", kernel_profile: Optional[str] = None):
         cfg = model.cfg
         kinds = set(cfg.attn_layers)
         if not kinds <= {"attn", "moe"}:
@@ -109,6 +112,13 @@ class PagedRunner:
         self.num_pages = num_pages
         self.max_pages = max_pages_per_seq
         self.chunk_size = chunk_size
+        # attention kernel dispatch: "auto" runs the jnp oracles on CPU and
+        # the split-K Pallas path on accelerators; "ref"/"pallas"/"splitk"
+        # force one. kernel_profile picks the block-size tuning table
+        # (None resolves by backend — see repro.kernels.ops).
+        self.attn_impl = attn_impl
+        self.kernel_profile = kernel_profile
+        self.tuning = kops.kernel_tuning(kernel_profile)
         self.io = io_spec_for_model(model)   # paged: per-token KV payload
         dt = model.dtype
         shp = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
@@ -163,7 +173,8 @@ class PagedRunner:
         rope = self._rope_for(positions)
         h = jnp.take(params["embed"], tokens[None], axis=0)
         attn_fn = (lambda p, c, x, cos, sin, kp, vp: _attn_prefill_paged(
-            p, c, x, cos, sin, kp, vp, block_table, ctx_len, chunk_len))
+            p, c, x, cos, sin, kp, vp, block_table, ctx_len, chunk_len,
+            impl=self.attn_impl, preset=self.kernel_profile))
         h, pages = self._run_stack(params, h, rope, pages, attn_fn)
         idx = jnp.maximum(chunk_len - 1, 0)
         h_last = jax.lax.dynamic_index_in_dim(h[0], idx, 0, keepdims=False)
@@ -175,7 +186,8 @@ class PagedRunner:
         rope = self._rope_for(positions)
         h = jnp.take(params["embed"], tokens[:, None], axis=0)
         attn_fn = (lambda p, c, x, cos, sin, kp, vp: _attn_decode_paged(
-            p, c, x, cos, sin, kp, vp, block_tables, pos))
+            p, c, x, cos, sin, kp, vp, block_tables, pos,
+            impl=self.attn_impl, preset=self.kernel_profile))
         h, pages = self._run_stack(params, h, rope, pages, attn_fn)
         logits = self._final_logits(params, h[:, 0])
         return logits, pages

@@ -4,9 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.chunked_prefill import chunked_prefill_attention
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import paged_attention, paged_attention_splitk
 from repro.kernels.ssd_scan import ssd_scan
 
 
@@ -87,6 +87,112 @@ def test_paged_attention_ignores_garbage_pages():
     vp2 = vp.at[4].set(123.0)
     out2 = paged_attention(q, kp2, vp2, bt, cl, interpret=True)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+def _paged_case(seed, b, hq, hkv, hd, bs, nblk, ctx_lens, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    p = nblk * b + 2
+    q = jax.random.normal(ks[0], (b, hq, hd), dtype)
+    kp = jax.random.normal(ks[1], (p, bs, hkv, hd), dtype)
+    vp = jax.random.normal(ks[2], (p, bs, hkv, hd), dtype)
+    bt = jax.random.randint(ks[3], (b, nblk), 0, p)
+    cl = jnp.asarray(ctx_lens, jnp.int32)
+    return q, kp, vp, bt, cl
+
+
+PAGED_DECODE_CASES = [
+    # (b, hq, hkv, hd, bs, nblk, ctx_lens) — GQA group sizes 1 / 4 / 8,
+    # ragged batches, and contexts shorter than a single page
+    (2, 4, 4, 32, 8, 4, [32, 17]),            # g=1 (MHA)
+    (3, 8, 2, 64, 16, 6, [96, 5, 48]),        # g=4, ragged + ctx < page
+    (2, 8, 1, 32, 8, 5, [40, 3]),             # g=8 (MQA), ctx < page
+    (4, 4, 1, 16, 4, 3, [12, 1, 7, 9]),       # g=4, every ctx ragged
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", PAGED_DECODE_CASES)
+@pytest.mark.parametrize("pages_per_split", [1, 2, 4])
+def test_paged_attention_splitk_sweep(dtype, case, pages_per_split):
+    b, hq, hkv, hd, bs, nblk, ctx_lens = case
+    q, kp, vp, bt, cl = _paged_case(b * 7 + hq, b, hq, hkv, hd, bs, nblk,
+                                    ctx_lens, dtype)
+    out = paged_attention_splitk(q, kp, vp, bt, cl,
+                                 pages_per_split=pages_per_split,
+                                 interpret=True)
+    want = ref.ref_paged_attention(q, kp, vp, bt, cl)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", PAGED_DECODE_CASES)
+def test_paged_attention_legacy_sweep(dtype, case):
+    """Same sweep through the legacy single-pass kernel: both code paths
+    must agree with the oracle on identical inputs."""
+    b, hq, hkv, hd, bs, nblk, ctx_lens = case
+    q, kp, vp, bt, cl = _paged_case(b * 7 + hq, b, hq, hkv, hd, bs, nblk,
+                                    ctx_lens, dtype)
+    out = paged_attention(q, kp, vp, bt, cl, interpret=True)
+    want = ref.ref_paged_attention(q, kp, vp, bt, cl)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_paged_attention_splitk_oversized_split():
+    """pages_per_split larger than the whole table degenerates to a single
+    split and must still match."""
+    q, kp, vp, bt, cl = _paged_case(3, 2, 4, 2, 32, 8, 4, [32, 9], jnp.float32)
+    out = paged_attention_splitk(q, kp, vp, bt, cl, pages_per_split=64,
+                                 interpret=True)
+    want = ref.ref_paged_attention(q, kp, vp, bt, cl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sc,t,hq,hkv,hd,ctx,blk_q,blk_k", [
+    (100, 420, 4, 1, 32, 250, 32, 64),   # nothing divides anything
+    (65, 131, 8, 2, 32, 66, 32, 32),     # off-by-one past block edges
+    (7, 16, 4, 4, 16, 9, 32, 32),        # chunk smaller than one block
+    (64, 192, 8, 8, 32, 128, 16, 48),    # g=1, blk_k not a divisor of t
+])
+def test_chunked_prefill_nondivisible_sweep(dtype, sc, t, hq, hkv, hd, ctx,
+                                            blk_q, blk_k):
+    rng = jax.random.PRNGKey(sc * 3 + ctx)
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (sc, hq, hd), dtype)
+    k = jax.random.normal(ks[1], (t, hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (t, hkv, hd), dtype)
+    out = chunked_prefill_attention(q, k, v, ctx, blk_q=blk_q, blk_k=blk_k,
+                                    interpret=True)
+    assert out.shape == q.shape and out.dtype == q.dtype
+    want = ref.ref_chunked_prefill_attention(q, k, v, ctx)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_ops_dispatch_and_tuning():
+    """ops-layer routing: impl="ref" is the oracle, impl="splitk"/"pallas"
+    agree with it, presets resolve to per-backend tuning tables."""
+    q, kp, vp, bt, cl = _paged_case(11, 2, 8, 2, 32, 8, 4, [32, 11],
+                                    jnp.float32)
+    want = ops.paged_attention(q, kp, vp, bt, cl, impl="ref")
+    np.testing.assert_allclose(
+        np.asarray(ref.ref_paged_attention(q, kp, vp, bt, cl)),
+        np.asarray(want), rtol=0, atol=0)
+    for impl in ("splitk", "pallas"):
+        got = ops.paged_attention(q, kp, vp, bt, cl, impl=impl, preset="cpu")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+    assert ops.kernel_tuning("h100").pages_per_split > \
+        ops.kernel_tuning("cpu").pages_per_split
+    assert ops.kernel_tuning(None) == ops.kernel_tuning("cpu")  # CPU backend
+    with pytest.raises(ValueError):
+        ops.kernel_tuning("tpu9000")
 
 
 @pytest.mark.parametrize("b,s,w,chunk,blk_w", [
